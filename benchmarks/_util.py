@@ -1,0 +1,23 @@
+"""Benchmark helpers. CPU timings are RELATIVE (algorithm vs algorithm on
+the same backend); absolute TPU numbers come from the dry-run roofline."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3, **kw):
+    """Best-of-iters wall time in microseconds (after jit warmup)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def row(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")

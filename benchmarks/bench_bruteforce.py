@@ -1,0 +1,47 @@
+"""§1 "new brute-force search structure": BVH vs brute force crossover.
+
+On TPU the brute-force index runs on the MXU (DESIGN.md §2) so the
+crossover N moves up vs GPU; on this CPU backend the numbers are relative
+but the SHAPE of the crossover (brute wins small-N, tree wins large-N)
+is the claim being validated. The Pallas kernel path is measured in
+interpret mode (correctness-grade timing, noted).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import geometry as G, predicates as P
+from repro.core.brute_force import BruteForce
+from repro.core.bvh import BVH
+from repro.data import point_cloud
+
+from ._util import row, timeit
+
+
+def main():
+    q = 1024
+    k = 8
+    qp = jnp.asarray(point_cloud("uniform", q, seed=4))
+    for n in (512, 4096, 32768):
+        pts = jnp.asarray(point_cloud("uniform", n, seed=5))
+        values = G.Points(pts)
+        preds = P.nearest(G.Points(qp), k=k)
+        bvh = BVH(None, values)
+        bf = BruteForce(None, values)
+        t_tree = timeit(lambda: bvh.knn(None, preds))
+        t_brute = timeit(lambda: bf.knn(None, preds))
+        d1, _ = bvh.knn(None, preds)
+        d2, _ = bf.knn(None, preds)
+        ok = np.allclose(np.asarray(d1), np.asarray(d2), atol=1e-5)
+        row(f"bruteforce/knn/n{n}/bvh", t_tree, f"exact={ok}")
+        row(f"bruteforce/knn/n{n}/brute_mxu", t_brute,
+            f"crossover={'brute' if t_brute < t_tree else 'tree'}")
+    # Pallas kernel (interpret mode on CPU)
+    from repro.kernels.ops import bruteforce_knn
+    pts = jnp.asarray(point_cloud("uniform", 4096, seed=5))
+    t_pallas = timeit(lambda: bruteforce_knn(qp, pts, k), iters=1)
+    row("bruteforce/knn/n4096/pallas_interpret", t_pallas,
+        "interpret-mode timing (correctness-grade, not perf)")
+
+
+if __name__ == "__main__":
+    main()

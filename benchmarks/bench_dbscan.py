@@ -1,0 +1,26 @@
+"""§2.4: FDBSCAN vs FDBSCAN-DenseBox across data densities (the paper's
+guidance: DenseBox for data with dense regions, plain for sparse)."""
+import numpy as np
+
+from repro.core.dbscan import dbscan, relabel_compact
+from repro.data import point_cloud
+
+from ._util import row, timeit
+
+
+def main():
+    n = 8192
+    for kind, eps in (("uniform", 0.02), ("clusters", 0.02),
+                      ("filaments", 0.01)):
+        X = point_cloud(kind, n, dim=3, seed=9)
+        for alg in ("fdbscan", "fdbscan-densebox"):
+            t = timeit(lambda: dbscan(X, eps, 5, algorithm=alg), iters=2)
+            lab, core = dbscan(X, eps, 5, algorithm=alg)
+            nc = int(relabel_compact(lab).max()) + 1
+            frac_core = float(np.asarray(core).mean())
+            row(f"dbscan/{kind}/{alg}", t,
+                f"clusters={nc} core_frac={frac_core:.2f}")
+
+
+if __name__ == "__main__":
+    main()

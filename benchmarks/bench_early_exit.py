@@ -1,0 +1,38 @@
+"""§2.6 bullet 5: early traversal termination via callbacks.
+
+The DBSCAN core-point test needs only `minPts` matches; terminating at
+the limit skips the remaining subtree visits. Dense data -> bigger win.
+"""
+import jax.numpy as jnp
+
+from repro.core import geometry as G, predicates as P, callbacks as CB
+from repro.core.bvh import BVH
+from repro.data import point_cloud
+
+from ._util import row, timeit
+
+
+def main():
+    n, q = 16384, 4096
+    for kind, r in (("uniform", 0.08), ("clusters", 0.05)):
+        pts = jnp.asarray(point_cloud(kind, n, seed=8))
+        qp = pts[:q]
+        bvh = BVH(None, G.Points(pts))
+        preds = P.intersects(G.Spheres(qp, jnp.full((q,), r, jnp.float32)))
+
+        cb_full, s_full = CB.counting()
+        cb_lim, s_lim = CB.count_with_limit(8)
+        sf = jnp.broadcast_to(s_full, (q,))
+        sl = jnp.broadcast_to(s_lim, (q,))
+
+        t_full = timeit(lambda: bvh.query_callback(None, preds, cb_full, sf))
+        t_lim = timeit(lambda: bvh.query_callback(None, preds, cb_lim, sl))
+        mean_matches = float(bvh.count(None, preds).mean())
+        row(f"early_exit/{kind}/full_count", t_full,
+            f"mean_matches={mean_matches:.1f}")
+        row(f"early_exit/{kind}/limit8", t_lim,
+            f"speedup={t_full/t_lim:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""§2.4: EMST (Boruvka single-tree) scaling + round counts."""
+import numpy as np
+
+from repro.core.emst import emst
+from repro.data import point_cloud
+
+from ._util import row, timeit
+
+
+def main():
+    for kind in ("uniform", "clusters"):
+        for n in (1024, 8192):
+            X = point_cloud(kind, n, dim=3, seed=10)
+            t = timeit(lambda: emst(X), iters=2)
+            eu, ev, ew = emst(X)
+            w = float(np.asarray(ew).sum())
+            row(f"emst/{kind}/n{n}", t,
+                f"weight={w:.3f} edges={int((np.asarray(eu) >= 0).sum())}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Perf hillclimb driver (§Perf): re-lower a cell with knob/config
+overrides and diff the roofline terms against the recorded baseline.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb \
+        --arch mixtral-8x22b --shape prefill_32k \
+        --set moe_impl=ragged --tag iter2_ragged
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+import jax.numpy as jnp
+
+
+def parse_val(v: str):
+    if v in ("True", "False"):
+        return v == "True"
+    if v == "bf16":
+        return jnp.bfloat16
+    if v == "f32":
+        return jnp.float32
+    try:
+        return int(v)
+    except ValueError:
+        try:
+            return float(v)
+        except ValueError:
+            return v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="knob or config field, e.g. moe_impl=ragged")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--out", default="experiments/hillclimb")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_cell
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = parse_val(v)
+
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   knobs_override=overrides or None)
+    rec["tag"] = args.tag
+    rec["overrides"] = {k: str(v) for k, v in overrides.items()}
+
+    # diff vs baseline
+    base_tag = f"{args.arch}__{args.shape}__{'mp' if args.multi_pod else 'sp'}"
+    base_path = os.path.join("experiments/dryrun", base_tag + ".json")
+    if os.path.exists(base_path) and rec.get("status") == "ok":
+        base = json.load(open(base_path))
+        if base.get("status") == "ok":
+            for term in ("t_compute", "t_memory", "t_collective",
+                         "peak_bytes"):
+                b, n = base[term], rec[term]
+                print(f"  {term}: {b:.3f} -> {n:.3f} "
+                      f"({(n/b - 1) * 100 if b else 0:+.1f}%)")
+    os.makedirs(args.out, exist_ok=True)
+    with open(os.path.join(args.out, f"{base_tag}__{args.tag}.json"),
+              "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Roofline report generator (deliverable g).
+
+Reads the dry-run records (experiments/dryrun/*.json) and emits the
+EXPERIMENTS.md §Roofline table: the three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS / HLO_FLOPS utility ratio, and a one-line
+recommendation per cell.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import get_config
+from repro.launch.specs import SHAPES
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_RECO = {
+    "compute": ("compute-bound: already near the useful-FLOP ceiling; "
+                "gains need causal block-skip / fewer remat recomputes"),
+    "memory": ("memory-bound: shrink materialized intermediates (bf16 "
+               "logits, flash-style VMEM-resident attention, fused "
+               "dispatch)"),
+    "collective": ("collective-bound: reduce cross-device traffic (cache "
+                   "FSDP gathers across microbatches, 2D expert sharding, "
+                   "overlap collectives with compute)"),
+}
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """Analytic useful FLOPs for the cell (6ND train / 2ND inference)."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    n_active = cfg.active_param_count
+    if cell.mode == "train":
+        tokens = cell.seq * cell.global_batch
+        return 6.0 * n_active * tokens
+    if cell.mode == "prefill":
+        tokens = cell.seq * cell.global_batch
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * cell.global_batch        # decode: 1 token/seq
+
+
+def load(dirname: str):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def table(recs, mesh_filter="16x16"):
+    print(f"\n### Roofline — mesh {mesh_filter} "
+          "(v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s/link ICI)\n")
+    print("| arch | shape | t_compute | t_memory | t_collective | "
+          "bottleneck | MODEL/HLO flops | peak GiB/dev | note |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("mesh") != mesh_filter:
+            continue
+        if r.get("status") == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | "
+                  f"SKIPPED: {r['reason'][:60]} |")
+            continue
+        if r.get("status") != "ok":
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | "
+                  f"FAILED: {r.get('error', '')[:60]} |")
+            continue
+        mf = model_flops(r["arch"], r["shape"])
+        hlo_global = r["flops_per_device"] * r["chips"]
+        ratio = mf / hlo_global if hlo_global else 0.0
+        fit = "" if r["peak_bytes"] < 16 * 2**30 else " **>16GiB**"
+        print(f"| {r['arch']} | {r['shape']} | {r['t_compute']:.3f}s | "
+              f"{r['t_memory']:.3f}s | {r['t_collective']:.3f}s | "
+              f"{r['bottleneck']} | {ratio:.2f} | "
+              f"{r['peak_bytes']/2**30:.1f}{fit} | "
+              f"{_RECO[r['bottleneck']][:40]}... |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="both")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    meshes = ["16x16", "2x16x16"] if args.mesh == "both" else [args.mesh]
+    for m in meshes:
+        table(recs, m)
+
+    # summary: the three hillclimb candidates
+    ok = [r for r in recs if r.get("status") == "ok"
+          and r["mesh"] == "16x16"]
+    if ok:
+        def frac(r):
+            mf = model_flops(r["arch"], r["shape"]) / r["chips"]
+            t_star = mf / PEAK_FLOPS
+            t_tot = max(r["t_compute"], r["t_memory"], r["t_collective"])
+            return t_star / t_tot if t_tot else 0.0
+        worst = min(ok, key=frac)
+        coll = max(ok, key=lambda r: r["t_collective"]
+                   / max(r["t_compute"], 1e-12))
+        print("\n### Hillclimb candidates (single-pod)")
+        print(f"- worst roofline fraction: {worst['arch']}/{worst['shape']} "
+              f"(useful-flop fraction {frac(worst):.4f})")
+        print(f"- most collective-bound: {coll['arch']}/{coll['shape']} "
+              f"(t_coll/t_comp = {coll['t_collective']/max(coll['t_compute'],1e-12):.1f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Benchmark driver: one module per paper table/claim. Prints
+``name,us_per_call,derived`` CSV rows (CPU timings are relative;
+TPU-derived numbers come from the dry-run roofline — EXPERIMENTS.md)."""
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "bench_construction",   # §2.6 morton 32/64 + build variants
+    "bench_traversal",      # §2.6 stackless vs stack
+    "bench_bruteforce",     # §1 brute-force index, crossover
+    "bench_callbacks",      # §2.2 callback vs store-then-reduce
+    "bench_early_exit",     # §2.6 early termination
+    "bench_dbscan",         # §2.4 FDBSCAN vs DenseBox
+    "bench_emst",           # §2.4 Boruvka EMST
+    "bench_raytracing",     # §2.5 three predicates
+    "bench_mls",            # §1 interpolation
+    "bench_distributed",    # §2.3 callback comm saving + weak scaling
+]
+
+
+def main():
+    only = sys.argv[1:] or None
+    print("name,us_per_call,derived")
+    failed = []
+    for name in MODULES:
+        if only and name not in only:
+            continue
+        try:
+            importlib.import_module(f"benchmarks.{name}").main()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

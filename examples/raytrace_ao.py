@@ -1,0 +1,53 @@
+"""Ambient-occlusion-style ray casting (§2.5): primary rays find the
+first hit (`nearest`), then hemisphere rays count blockers
+(`intersect` with early exit) — rendered as ASCII shading.
+
+    PYTHONPATH=src python examples/raytrace_ao.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BVH, cast_nearest, geometry as G
+from repro.core import callbacks as CB, predicates as P
+
+
+def main():
+    rng = np.random.default_rng(3)
+    # a bumpy floor of triangles + a few floating blockers
+    n = 3000
+    base = rng.uniform(0, 1, (n, 2)).astype(np.float32)
+    z = (0.1 * np.sin(6 * base[:, 0]) * np.cos(6 * base[:, 1]))
+    a = np.column_stack([base, z]).astype(np.float32)
+    b = a + rng.uniform(-0.03, 0.03, (n, 3)).astype(np.float32)
+    c = a + rng.uniform(-0.03, 0.03, (n, 3)).astype(np.float32)
+    tris = G.Triangles(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c))
+    bvh = BVH(None, tris)
+
+    # orthographic camera looking straight down
+    res = 32
+    xs, ys = np.meshgrid(np.linspace(0, 1, res), np.linspace(0, 1, res))
+    o = np.column_stack([xs.ravel(), ys.ravel(),
+                         np.full(res * res, 2.0)]).astype(np.float32)
+    d = np.tile([0, 0, -1.0], (res * res, 1)).astype(np.float32)
+    rays = G.Rays(jnp.asarray(o), jnp.asarray(d))
+    t, idx = cast_nearest(bvh, rays, k=1)
+    t = np.asarray(t)[:, 0]
+    hit = np.isfinite(t)
+
+    # occlusion: one shadow ray per pixel toward a slanted light,
+    # early-exit at the first blocker (§2.6 bullet 5)
+    hp = o + d * np.minimum(t, 10)[:, None] - d * 1e-3
+    ld = np.tile([0.3, 0.2, 1.0], (res * res, 1)).astype(np.float32)
+    sh_rays = P.RayIntersect(G.Rays(jnp.asarray(hp), jnp.asarray(ld)))
+    cb, s0 = CB.count_with_limit(1)
+    s0 = jnp.broadcast_to(s0, (res * res,))
+    blocked = np.asarray(bvh.query_callback(None, sh_rays, cb, s0)) > 0
+
+    shades = np.where(~hit, " ", np.where(blocked, "░", "█"))
+    for r in shades.reshape(res, res)[::2]:
+        print("".join(r))
+    print(f"hit {hit.mean():.0%} of pixels, {blocked[hit].mean():.0%} in shadow")
+
+
+if __name__ == "__main__":
+    main()

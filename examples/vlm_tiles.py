@@ -1,0 +1,59 @@
+"""LLaVA-NeXT "anyres" tile selection as a geometric overlap query —
+the paper's library applied inside the VLM frontend (DESIGN.md §4).
+
+Given an input image resolution and the model's supported tile grids,
+pick the grid whose tiles best cover the image: a box-overlap query
+between the image rectangle and candidate tile boxes via repro.core.
+
+    PYTHONPATH=src python examples/vlm_tiles.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BVH, geometry as G, intersects
+
+BASE = 336                       # CLIP-L/14 @ 336
+GRIDS = [(1, 1), (1, 2), (2, 1), (2, 2), (1, 3), (3, 1), (1, 4), (4, 1)]
+
+
+def tile_boxes():
+    """All candidate tile rectangles across the supported grids (2D)."""
+    lo, hi, grid_id = [], [], []
+    for gid, (gy, gx) in enumerate(GRIDS):
+        for iy in range(gy):
+            for ix in range(gx):
+                lo.append([ix * BASE, iy * BASE])
+                hi.append([(ix + 1) * BASE, (iy + 1) * BASE])
+                grid_id.append(gid)
+    return (G.Boxes(jnp.asarray(lo, jnp.float32), jnp.asarray(hi, jnp.float32)),
+            np.asarray(grid_id))
+
+
+def select_grid(width, height):
+    boxes, grid_id = tile_boxes()
+    tree = BVH(None, boxes)
+    img = intersects(G.Boxes(jnp.asarray([[0.0, 0.0]], jnp.float32),
+                             jnp.asarray([[width, height]], jnp.float32)))
+    _, idx, _ = tree.query(None, img)
+    touched = np.asarray(idx)
+    # pick the grid with max coverage and min waste
+    best, best_score = None, -1e18
+    for gid, (gy, gx) in enumerate(GRIDS):
+        cover = min(width, gx * BASE) * min(height, gy * BASE)
+        waste = gx * gy * BASE * BASE - cover
+        score = cover - 0.1 * waste
+        if score > best_score:
+            best, best_score = gid, score
+    n_tiles = int((grid_id[touched] == best).sum())
+    return GRIDS[best], n_tiles
+
+
+def main():
+    for (w, h) in [(336, 336), (672, 336), (500, 1000), (1344, 336)]:
+        grid, n = select_grid(w, h)
+        print(f"image {w}x{h} -> grid {grid[1]}x{grid[0]} "
+              f"({n} tiles overlap the image)")
+
+
+if __name__ == "__main__":
+    main()

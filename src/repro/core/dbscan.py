@@ -1,0 +1,198 @@
+"""DBSCAN (§2.4): FDBSCAN and FDBSCAN-DenseBox (Prokopenko et al. 2023a),
+adapted to TPU (DESIGN.md §2: no atomics).
+
+Both variants follow the paper's two phases:
+
+  1. **Core determination** — count neighbors within ``eps`` with *early
+     traversal termination* at ``min_pts`` (§2.6 bullet 5; this is the
+     paper's own motivating example for early exit).
+  2. **Cluster formation** — ArborX uses an atomic-CAS union-find
+     (ECL-CC style). The TPU-native replacement is *hook + pointer
+     jumping*: every core point queries the min label among its core
+     neighbors (a BVH traversal with a min-reducing callback), then labels
+     are compressed by repeated ``L = L[L]``. Min-label + compression
+     converges in O(log n) rounds of (query, jump) instead of O(alpha)
+     atomic unions; each round is fully parallel.
+
+FDBSCAN-DenseBox additionally overlays a grid with cell size
+``eps / sqrt(dim)``: any cell holding >= min_pts points is *dense* — all
+its points are core with no distance computations, and they share one
+label from the start. This prunes both phases for dense data.
+
+Labels: cluster id = min original index in the cluster; noise = -1.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import callbacks as CB
+from . import geometry as G
+from . import predicates as P
+from . import traversal as T
+from .lbvh import build as lbvh_build
+
+__all__ = ["dbscan", "core_points", "relabel_compact"]
+
+_BIG = jnp.int32(2**31 - 1)
+
+
+def core_points(tree, pts: G.Points, eps: float, min_pts: int) -> jax.Array:
+    """(N,) bool: has >= min_pts neighbors within eps (self included),
+    using early-terminating counting (§2.2 + §2.6)."""
+    n = len(pts)
+    preds = P.intersects(G.Spheres(pts.coords, jnp.full((n,), eps, pts.coords.dtype)))
+    cb, s0 = CB.count_with_limit(min_pts)
+    s0 = jnp.broadcast_to(s0, (n,))
+    counts = T.traverse(tree, pts, preds, cb, s0)
+    return counts >= min_pts
+
+
+def _min_core_label_round(tree, pts, eps, is_core, labels):
+    """One propagation round: for every point, the min label among core
+    neighbors within eps (BIG when none)."""
+    n = len(pts)
+    preds = P.intersects(G.Spheres(pts.coords, jnp.full((n,), eps, pts.coords.dtype)))
+
+    def cb(state, pred, value, index, t):
+        cand = jnp.where(is_core[index], labels[index], _BIG)
+        return jnp.minimum(state, cand), jnp.bool_(False)
+
+    s0 = jnp.full((n,), _BIG)
+    return T.traverse(tree, pts, preds, cb, s0)
+
+
+def _pointer_jump(labels):
+    """Full path compression: L = L[L] to fixpoint (O(log n) steps)."""
+    def cond(c):
+        l, changed = c
+        return changed
+
+    def body(c):
+        l, _ = c
+        l2 = l[l]
+        return l2, jnp.any(l2 != l)
+
+    labels, _ = jax.lax.while_loop(cond, body, (labels, jnp.bool_(True)))
+    return labels
+
+
+@partial(jax.jit, static_argnames=("min_pts", "dense_box"))
+def _dbscan_impl(coords, eps, min_pts: int, cell_label, cell_core, dense_box: bool):
+    pts = G.Points(coords)
+    n = coords.shape[0]
+    boxes = G.Boxes(coords, coords)
+    tree = lbvh_build(boxes)
+
+    if dense_box:
+        is_core = cell_core | core_points(tree, pts, eps, min_pts)
+        labels0 = jnp.where(is_core, cell_label, _BIG)
+    else:
+        is_core = core_points(tree, pts, eps, min_pts)
+        labels0 = jnp.where(is_core, jnp.arange(n, dtype=jnp.int32), _BIG)
+
+    # hook + jump until fixpoint over CORE points
+    def cond(c):
+        labels, changed = c
+        return changed
+
+    def body(c):
+        labels, _ = c
+        m = _min_core_label_round(tree, pts, eps, is_core, labels)
+        new = jnp.where(is_core, jnp.minimum(labels, m), labels)
+        new = jnp.where(is_core, _pointer_jump_core(new), new)
+        return new, jnp.any(new != labels)
+
+    labels, _ = jax.lax.while_loop(cond, body, (labels0, jnp.bool_(True)))
+
+    # border points: min core-neighbor label; noise: -1
+    border = _min_core_label_round(tree, pts, eps, is_core, labels)
+    labels = jnp.where(is_core, labels, border)
+    labels = jnp.where(labels == _BIG, jnp.int32(-1), labels)
+    return labels, is_core
+
+
+def _pointer_jump_core(labels):
+    """Compress labels interpreted as pointers into point-index space; BIG
+    (unassigned) entries map to themselves."""
+    n = labels.shape[0]
+    safe = jnp.where(labels < n, labels, jnp.arange(n, dtype=jnp.int32))
+
+    def cond(c):
+        l, changed = c
+        return changed
+
+    def body(c):
+        l, _ = c
+        l2 = jnp.minimum(l, l[l])
+        return l2, jnp.any(l2 != l)
+
+    safe, _ = jax.lax.while_loop(cond, body, (safe, jnp.bool_(True)))
+    return jnp.where(labels < n, safe, labels)
+
+
+def _dense_cells(coords, eps, min_pts):
+    """Grid preprocessing for FDBSCAN-DenseBox.
+
+    Returns (cell_label, cell_core): per-point initial label (min index in
+    the point's cell if that cell is dense, else own index) and bool "point
+    is in a dense cell". Cell ids are dense ranks from a lexicographic sort
+    of per-dim cell indices (no 64-bit keys needed).
+    """
+    n, dim = coords.shape
+    h = eps / jnp.sqrt(jnp.float32(dim))
+    lo = coords.min(0)
+    cell = jnp.floor((coords - lo) / h).astype(jnp.int32)     # (N, dim)
+
+    perm = jnp.arange(n, dtype=jnp.int32)
+    keys = tuple(cell[:, d] for d in range(dim)) + (perm,)
+    sorted_keys = jax.lax.sort(keys, num_keys=dim)
+    cell_s = jnp.stack(sorted_keys[:dim], axis=1)
+    perm_s = sorted_keys[dim]
+
+    new_cell = jnp.concatenate([
+        jnp.ones((1,), bool),
+        jnp.any(cell_s[1:] != cell_s[:-1], axis=1)])
+    # segment id per sorted position, count per segment, min index per segment
+    seg = jnp.cumsum(new_cell.astype(jnp.int32)) - 1          # (N,) sorted order
+    seg_count = jnp.zeros((n,), jnp.int32).at[seg].add(1)
+    seg_min_idx = jnp.full((n,), _BIG).at[seg].min(perm_s)
+    dense_sorted = seg_count[seg] >= min_pts
+    label_sorted = jnp.where(dense_sorted, seg_min_idx[seg], perm_s)
+
+    cell_label = jnp.zeros((n,), jnp.int32).at[perm_s].set(label_sorted)
+    cell_core = jnp.zeros((n,), bool).at[perm_s].set(dense_sorted)
+    return cell_label, cell_core
+
+
+def dbscan(coords, eps: float, min_pts: int, *, algorithm: str = "fdbscan"):
+    """DBSCAN over (N, dim) coords.
+
+    algorithm: "fdbscan" (sparse data) or "fdbscan-densebox" (dense
+    regions). Returns (labels, is_core); labels[i] = -1 for noise, else the
+    min original index in i's cluster.
+    """
+    coords = jnp.asarray(coords)
+    n = coords.shape[0]
+    eps = jnp.asarray(eps, coords.dtype)
+    if algorithm == "fdbscan":
+        zl = jnp.zeros((n,), jnp.int32)
+        zc = jnp.zeros((n,), bool)
+        return _dbscan_impl(coords, eps, min_pts, zl, zc, False)
+    if algorithm == "fdbscan-densebox":
+        cell_label, cell_core = _dense_cells(coords, eps, min_pts)
+        return _dbscan_impl(coords, eps, min_pts, cell_label, cell_core, True)
+    raise ValueError(f"unknown algorithm {algorithm!r}")
+
+
+def relabel_compact(labels):
+    """Renumber labels to 0..C-1 (noise stays -1). Host-side helper."""
+    import numpy as np
+    lab = np.asarray(labels)
+    out = np.full_like(lab, -1)
+    uniq = np.unique(lab[lab >= 0])
+    for c, u in enumerate(uniq):
+        out[lab == u] = c
+    return out

@@ -1,0 +1,373 @@
+"""Geometries (ArborX 2.0 §1: points, boxes, spheres, kDOPs, triangles, rays,
+tetrahedrons, segments), dimension-generic (1-10) and precision-generic.
+
+All geometries are pytrees of batched arrays: a "geometry array" holds N
+geometries with coordinate arrays shaped (N, dim) (or (N, k) for kDOP slabs).
+This is the JAX-native analogue of ``Kokkos::View<ArborX::Box<3>*>``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import ClassVar
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Points", "Boxes", "Spheres", "Triangles", "Segments", "Tetrahedra",
+    "Rays", "KDOPs", "kdop_directions", "expand", "centroid", "bounding_box",
+    "merge_boxes", "box_union", "distance_point_box", "distance_point_point",
+    "intersects_box_box", "intersects_box_sphere", "to_boxes",
+]
+
+
+def _register(cls):
+    """Register a geometry dataclass as a pytree."""
+    cls = dataclasses.dataclass(frozen=True)(cls)
+    fields = [f.name for f in dataclasses.fields(cls)]
+    jax.tree_util.register_pytree_node(
+        cls,
+        lambda obj: (tuple(getattr(obj, f) for f in fields), None),
+        lambda aux, children: cls(*children),
+    )
+    return cls
+
+
+@_register
+class Points:
+    """N points in `dim` dimensions: coords (N, dim)."""
+    coords: jax.Array
+
+    @property
+    def dim(self):
+        return self.coords.shape[-1]
+
+    def __len__(self):
+        return self.coords.shape[0]
+
+
+@_register
+class Boxes:
+    """Axis-aligned bounding boxes: lo/hi (N, dim)."""
+    lo: jax.Array
+    hi: jax.Array
+
+    @property
+    def dim(self):
+        return self.lo.shape[-1]
+
+    def __len__(self):
+        return self.lo.shape[0]
+
+
+@_register
+class Spheres:
+    """Spheres: center (N, dim), radius (N,)."""
+    center: jax.Array
+    radius: jax.Array
+
+    @property
+    def dim(self):
+        return self.center.shape[-1]
+
+    def __len__(self):
+        return self.center.shape[0]
+
+
+@_register
+class Triangles:
+    """Triangles: vertices a/b/c (N, dim)."""
+    a: jax.Array
+    b: jax.Array
+    c: jax.Array
+
+    @property
+    def dim(self):
+        return self.a.shape[-1]
+
+    def __len__(self):
+        return self.a.shape[0]
+
+
+@_register
+class Segments:
+    """Line segments: endpoints a/b (N, dim)."""
+    a: jax.Array
+    b: jax.Array
+
+    @property
+    def dim(self):
+        return self.a.shape[-1]
+
+    def __len__(self):
+        return self.a.shape[0]
+
+
+@_register
+class Tetrahedra:
+    """Tetrahedra: vertices a/b/c/d (N, 3)."""
+    a: jax.Array
+    b: jax.Array
+    c: jax.Array
+    d: jax.Array
+
+    @property
+    def dim(self):
+        return self.a.shape[-1]
+
+    def __len__(self):
+        return self.a.shape[0]
+
+
+@_register
+class Rays:
+    """Rays: origin (N, dim), direction (N, dim) (need not be normalized)."""
+    origin: jax.Array
+    direction: jax.Array
+
+    @property
+    def dim(self):
+        return self.origin.shape[-1]
+
+    def __len__(self):
+        return self.origin.shape[0]
+
+
+def kdop_directions(dim: int, k: int, dtype=jnp.float32) -> jax.Array:
+    """Slab direction sets for k-DOPs (Klosowski et al. 1998).
+
+    2D: k in {4, 8}; 3D: k in {6, 14, 18, 26}. Returns (k//2, dim) unit-ish
+    (unnormalized integer) directions; a k-DOP stores min/max support along
+    each direction.
+    """
+    if dim == 2:
+        if k == 4:
+            d = [(1, 0), (0, 1)]
+        elif k == 8:
+            d = [(1, 0), (0, 1), (1, 1), (1, -1)]
+        else:
+            raise ValueError(f"unsupported 2D kDOP k={k}")
+    elif dim == 3:
+        axes = [(1, 0, 0), (0, 1, 0), (0, 0, 1)]
+        diag = [(1, 1, 1), (1, -1, 1), (1, 1, -1), (1, -1, -1)]
+        edge = [(1, 1, 0), (1, -1, 0), (1, 0, 1), (1, 0, -1), (0, 1, 1), (0, 1, -1)]
+        if k == 6:
+            d = axes
+        elif k == 14:
+            d = axes + diag
+        elif k == 18:
+            d = axes + edge
+        elif k == 26:
+            d = axes + diag + edge
+        else:
+            raise ValueError(f"unsupported 3D kDOP k={k}")
+    else:
+        raise ValueError(f"kDOP only defined for dim 2/3, got {dim}")
+    return jnp.asarray(np.array(d), dtype=dtype)
+
+
+@_register
+class KDOPs:
+    """k-DOPs: support intervals along fixed directions.
+
+    lo/hi: (N, k//2) support mins/maxes; directions: (k//2, dim).
+    """
+    lo: jax.Array
+    hi: jax.Array
+    directions: jax.Array
+
+    @property
+    def dim(self):
+        return self.directions.shape[-1]
+
+    def __len__(self):
+        return self.lo.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# Bounding boxes ("IndexableGetter" support): every geometry -> AABB
+# ---------------------------------------------------------------------------
+
+def to_boxes(geom) -> Boxes:
+    """Compute axis-aligned bounding boxes for any supported geometry array."""
+    if isinstance(geom, Boxes):
+        return geom
+    if isinstance(geom, Points):
+        return Boxes(geom.coords, geom.coords)
+    if isinstance(geom, Spheres):
+        r = geom.radius[..., None]
+        return Boxes(geom.center - r, geom.center + r)
+    if isinstance(geom, Triangles):
+        v = jnp.stack([geom.a, geom.b, geom.c], axis=0)
+        return Boxes(v.min(0), v.max(0))
+    if isinstance(geom, Segments):
+        return Boxes(jnp.minimum(geom.a, geom.b), jnp.maximum(geom.a, geom.b))
+    if isinstance(geom, Tetrahedra):
+        v = jnp.stack([geom.a, geom.b, geom.c, geom.d], axis=0)
+        return Boxes(v.min(0), v.max(0))
+    if isinstance(geom, KDOPs):
+        # axis-aligned slabs are the first `dim` directions for our sets
+        d = geom.dim
+        return Boxes(geom.lo[..., :d], geom.hi[..., :d])
+    raise TypeError(f"no bounding box rule for {type(geom).__name__}")
+
+
+def centroid(geom) -> jax.Array:
+    """(N, dim) centroids of a geometry array."""
+    if isinstance(geom, Points):
+        return geom.coords
+    if isinstance(geom, Spheres):
+        return geom.center
+    b = to_boxes(geom)
+    return 0.5 * (b.lo + b.hi)
+
+
+def expand(boxes: Boxes, other: Boxes) -> Boxes:
+    """Union of two box arrays elementwise."""
+    return Boxes(jnp.minimum(boxes.lo, other.lo), jnp.maximum(boxes.hi, other.hi))
+
+
+def merge_boxes(boxes: Boxes) -> Boxes:
+    """Reduce a box array into a single enclosing box (shape (1, dim))."""
+    return Boxes(boxes.lo.min(0, keepdims=True), boxes.hi.max(0, keepdims=True))
+
+
+def box_union(lo_a, hi_a, lo_b, hi_b):
+    return jnp.minimum(lo_a, lo_b), jnp.maximum(hi_a, hi_b)
+
+
+# ---------------------------------------------------------------------------
+# Scalar geometry kernels (operate on single geometries; vmap for arrays)
+# ---------------------------------------------------------------------------
+
+def distance_point_point(p, q):
+    return jnp.sqrt(jnp.sum((p - q) ** 2, axis=-1))
+
+
+def distance_point_box(p, lo, hi):
+    """Euclidean distance from point to AABB (0 inside)."""
+    d = jnp.maximum(jnp.maximum(lo - p, p - hi), 0.0)
+    return jnp.sqrt(jnp.sum(d * d, axis=-1))
+
+
+def distance_point_box_sq(p, lo, hi):
+    d = jnp.maximum(jnp.maximum(lo - p, p - hi), 0.0)
+    return jnp.sum(d * d, axis=-1)
+
+
+def distance_point_sphere(p, c, r):
+    return jnp.maximum(distance_point_point(p, c) - r, 0.0)
+
+
+def distance_point_segment(p, a, b):
+    ab = b - a
+    t = jnp.clip(jnp.sum((p - a) * ab, -1) / jnp.maximum(jnp.sum(ab * ab, -1), 1e-30), 0.0, 1.0)
+    proj = a + t[..., None] * ab
+    return distance_point_point(p, proj)
+
+
+def distance_point_triangle(p, a, b, c):
+    """Distance from point to triangle (any dim; exact for 2D/3D)."""
+    # project onto plane, check barycentric, else min over edges
+    ab, ac, ap = b - a, c - a, p - a
+    d1, d2 = jnp.sum(ab * ap, -1), jnp.sum(ac * ap, -1)
+    d00, d01, d11 = jnp.sum(ab * ab, -1), jnp.sum(ab * ac, -1), jnp.sum(ac * ac, -1)
+    denom = jnp.maximum(d00 * d11 - d01 * d01, 1e-30)
+    v = (d11 * d1 - d01 * d2) / denom
+    w = (d00 * d2 - d01 * d1) / denom
+    inside = (v >= 0) & (w >= 0) & (v + w <= 1)
+    proj = a + v[..., None] * ab + w[..., None] * ac
+    d_plane = distance_point_point(p, proj)
+    d_edges = jnp.minimum(
+        distance_point_segment(p, a, b),
+        jnp.minimum(distance_point_segment(p, b, c), distance_point_segment(p, a, c)),
+    )
+    return jnp.where(inside, d_plane, d_edges)
+
+
+def intersects_box_box(lo_a, hi_a, lo_b, hi_b):
+    return jnp.all((lo_a <= hi_b) & (lo_b <= hi_a), axis=-1)
+
+
+def intersects_box_sphere(lo, hi, c, r):
+    return distance_point_box_sq(c, lo, hi) <= r * r
+
+
+def intersects_box_point(lo, hi, p):
+    return jnp.all((lo <= p) & (p <= hi), axis=-1)
+
+
+def point_in_triangle(p, a, b, c):
+    ab, ac, ap = b - a, c - a, p - a
+    d1, d2 = jnp.sum(ab * ap, -1), jnp.sum(ac * ap, -1)
+    d00, d01, d11 = jnp.sum(ab * ab, -1), jnp.sum(ab * ac, -1), jnp.sum(ac * ac, -1)
+    denom = jnp.maximum(d00 * d11 - d01 * d01, 1e-30)
+    v = (d11 * d1 - d01 * d2) / denom
+    w = (d00 * d2 - d01 * d1) / denom
+    return (v >= -1e-7) & (w >= -1e-7) & (v + w <= 1 + 1e-7)
+
+
+def point_in_tetrahedron(p, a, b, c, d):
+    def same_side(v0, v1, v2, v3, pt):
+        n = jnp.cross(v1 - v0, v2 - v0)
+        return jnp.sum(n * (v3 - v0), -1) * jnp.sum(n * (pt - v0), -1) >= -1e-9
+    return (same_side(a, b, c, d, p) & same_side(b, c, d, a, p)
+            & same_side(c, d, a, b, p) & same_side(d, a, b, c, p))
+
+
+# --- ray intersection kernels (§2.5: box, triangle, sphere) ----------------
+
+def ray_box(origin, direction, lo, hi):
+    """Slab test. Returns (hit: bool, t_enter: float). t >= 0 only.
+
+    Zero direction components are handled exactly: the slab contributes
+    (-inf, inf) when the origin lies inside it and a guaranteed miss
+    otherwise (the eps-substitution trick breaks on degenerate boxes
+    whose boundary the origin sits on)."""
+    zero = jnp.abs(direction) < 1e-30
+    inv = 1.0 / jnp.where(zero, 1.0, direction)
+    t0 = (lo - origin) * inv
+    t1 = (hi - origin) * inv
+    tmin_d = jnp.minimum(t0, t1)
+    tmax_d = jnp.maximum(t0, t1)
+    inside = (origin >= lo) & (origin <= hi)
+    tmin_d = jnp.where(zero, jnp.where(inside, -jnp.inf, jnp.inf), tmin_d)
+    tmax_d = jnp.where(zero, jnp.where(inside, jnp.inf, -jnp.inf), tmax_d)
+    tmin = jnp.max(tmin_d, axis=-1)
+    tmax = jnp.min(tmax_d, axis=-1)
+    hit = (tmax >= jnp.maximum(tmin, 0.0))
+    t_enter = jnp.maximum(tmin, 0.0)
+    return hit, jnp.where(hit, t_enter, jnp.inf)
+
+
+def ray_sphere(origin, direction, center, radius):
+    """Quadratic. Returns (hit, t) for nearest non-negative t."""
+    d2 = jnp.sum(direction * direction, -1)
+    oc = origin - center
+    b = jnp.sum(oc * direction, -1)
+    c = jnp.sum(oc * oc, -1) - radius * radius
+    disc = b * b - d2 * c
+    sq = jnp.sqrt(jnp.maximum(disc, 0.0))
+    t0 = (-b - sq) / jnp.maximum(d2, 1e-30)
+    t1 = (-b + sq) / jnp.maximum(d2, 1e-30)
+    t = jnp.where(t0 >= 0, t0, t1)
+    hit = (disc >= 0) & (t >= 0)
+    return hit, jnp.where(hit, t, jnp.inf)
+
+
+def ray_triangle(origin, direction, a, b, c):
+    """Möller–Trumbore. Returns (hit, t). 3D only."""
+    e1, e2 = b - a, c - a
+    pvec = jnp.cross(direction, e2)
+    det = jnp.sum(e1 * pvec, -1)
+    inv_det = 1.0 / jnp.where(jnp.abs(det) < 1e-12,
+                              jnp.where(det >= 0, 1e-12, -1e-12), det)
+    tvec = origin - a
+    u = jnp.sum(tvec * pvec, -1) * inv_det
+    qvec = jnp.cross(tvec, e1)
+    v = jnp.sum(direction * qvec, -1) * inv_det
+    t = jnp.sum(e2 * qvec, -1) * inv_det
+    hit = (jnp.abs(det) > 1e-12) & (u >= -1e-7) & (v >= -1e-7) & (u + v <= 1 + 1e-7) & (t >= 0)
+    return hit, jnp.where(hit, t, jnp.inf)

@@ -1,0 +1,237 @@
+"""LBVH construction (§2.6).
+
+ArborX 2.0 on GPU: 64-bit Morton + Apetrei's agglomerative bottom-up build
+(atomics) + stackless-traversal ropes (Prokopenko & Lebrun-Grandié 2024).
+
+TPU adaptation (see DESIGN.md §2): no device-wide atomics in the XLA/Pallas
+programming model, so we build functionally:
+
+  1. Morton sort            -> jax.lax.sort (multi-key for 64-bit codes)
+  2. node *ranges*          -> Karras-style parallel binary search over deltas
+  3. parent/child *linking* -> O(1) per node from ranges + split (Apetrei's
+                               insight that linking needs no extra search)
+  4. AABB refit             -> **RMQ sparse-table** over sorted leaf boxes
+                               (internal box == per-dim min/max over the leaf
+                               range — a range-min query, O(N log N) fully
+                               parallel, no atomics and no level sync), or an
+                               iterative readiness fixpoint for huge N
+  5. ropes                  -> closed form: rope(node covering [f,l]) =
+                               right_child(split_owner(l)); split positions
+                               are a bijection so this is one scatter+gather.
+
+Node numbering: internal 0..N-2 (root = 0), leaves N-1..2N-2
+(leaf node id = N-1 + sorted position). SENTINEL rope = -1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import morton as M
+from .geometry import Boxes
+
+__all__ = ["LBVH", "build"]
+
+SENTINEL = jnp.int32(-1)
+
+
+def _register(cls):
+    cls = dataclasses.dataclass(frozen=True)(cls)
+    fields = [f.name for f in dataclasses.fields(cls)]
+    jax.tree_util.register_pytree_node(
+        cls,
+        lambda obj: (tuple(getattr(obj, f) for f in fields), None),
+        lambda aux, children: cls(*children),
+    )
+    return cls
+
+
+@_register
+class LBVH:
+    """Flat LBVH. All arrays are device arrays; the structure is a pytree so
+    it can cross jit/shard_map boundaries."""
+    node_lo: jax.Array      # (2N-1, dim) node AABB mins   (internal | leaves)
+    node_hi: jax.Array      # (2N-1, dim)
+    left_child: jax.Array   # (N-1,) int32 node ids
+    right_child: jax.Array  # (N-1,)
+    rope: jax.Array         # (2N-1,) int32 escape pointers (stackless, -1 = done)
+    range_last: jax.Array   # (2N-1,) int32 last sorted-leaf position in subtree
+    leaf_perm: jax.Array    # (N,) int32: sorted leaf position -> original index
+
+    @property
+    def num_leaves(self):
+        return self.leaf_perm.shape[0]
+
+    @property
+    def dim(self):
+        return self.node_lo.shape[-1]
+
+
+def _dkey(hi, lo, idx, i, j, n):
+    """delta(i, j) = common-prefix length of 96-bit augmented keys, -1 when
+    j outside [0, n-1]. i, j: int32 arrays of equal shape."""
+    j_ok = (j >= 0) & (j <= n - 1)
+    jc = jnp.clip(j, 0, n - 1)
+    hx = hi[i] ^ hi[jc]
+    lx = lo[i] ^ lo[jc]
+    ix = idx[i] ^ idx[jc]
+    d_hi = M._clz32(hx)
+    d_lo = 32 + M._clz32(lx)
+    d_ix = 64 + M._clz32(ix)
+    d = jnp.where(hx != 0, d_hi, jnp.where(lx != 0, d_lo, d_ix))
+    return jnp.where(j_ok, d, -1)
+
+
+def _karras_ranges(hi, lo, idx, n: int, max_log2: int):
+    """Vectorized Karras range+split computation for all internal nodes.
+
+    Returns (first, last, gamma): (N-1,) int32 each. All searches run as
+    unrolled log2(N) passes of vector-wide gathers (VPU-friendly)."""
+    i = jnp.arange(n - 1, dtype=jnp.int32)
+    d_r = _dkey(hi, lo, idx, i, i + 1, n)
+    d_l = _dkey(hi, lo, idx, i, i - 1, n)
+    d = jnp.where(d_r > d_l, jnp.int32(1), jnp.int32(-1))
+    delta_min = jnp.where(d > 0, d_l, d_r)
+
+    # upper bound for range length: exponential search
+    l_max = jnp.full_like(i, 2)
+    for _ in range(max_log2 + 1):
+        cond = _dkey(hi, lo, idx, i, i + l_max * d, n) > delta_min
+        l_max = jnp.where(cond, l_max * 2, l_max)
+
+    # binary search for exact length l
+    l = jnp.zeros_like(i)
+    t = l_max // 2
+    for _ in range(max_log2 + 1):
+        cond = (t >= 1) & (_dkey(hi, lo, idx, i, i + (l + t) * d, n) > delta_min)
+        l = jnp.where(cond, l + t, l)
+        t = t // 2
+    j = i + l * d
+    first = jnp.minimum(i, j)
+    last = jnp.maximum(i, j)
+
+    # split search: largest s with delta(i, i + (s+t)*d) > delta_node
+    delta_node = _dkey(hi, lo, idx, i, j, n)
+    s = jnp.zeros_like(i)
+    div = jnp.full_like(i, 2)
+    for _ in range(max_log2 + 1):
+        t = (l + div - 1) // div      # ceil(l / div)
+        cond = (t >= 1) & (_dkey(hi, lo, idx, i, i + (s + t) * d, n) > delta_node)
+        s = jnp.where(cond, s + t, s)
+        div = div * 2
+    gamma = i + s * d + jnp.minimum(d, 0)
+    return first, last, gamma
+
+
+def _refit_rmq(leaf_lo, leaf_hi, first, last, max_log2: int):
+    """Internal AABBs via range-min/max sparse tables over sorted leaf boxes.
+
+    Beyond-paper TPU optimization: replaces ArborX's atomic-gated bottom-up
+    refit with two O(N log N) prefix tables + one gather per node.
+    """
+    n = leaf_lo.shape[0]
+    levels_lo = [leaf_lo]
+    levels_hi = [leaf_hi]
+    for k in range(1, max_log2 + 1):
+        h = 1 << (k - 1)
+        prev_lo, prev_hi = levels_lo[-1], levels_hi[-1]
+        # min(prev[i], prev[i+h]) with +inf/-inf padding past the end
+        pad_lo = jnp.full((h, leaf_lo.shape[1]), jnp.inf, leaf_lo.dtype)
+        pad_hi = jnp.full((h, leaf_hi.shape[1]), -jnp.inf, leaf_hi.dtype)
+        shift_lo = jnp.concatenate([prev_lo[h:], pad_lo], 0)
+        shift_hi = jnp.concatenate([prev_hi[h:], pad_hi], 0)
+        levels_lo.append(jnp.minimum(prev_lo, shift_lo))
+        levels_hi.append(jnp.maximum(prev_hi, shift_hi))
+    tbl_lo = jnp.stack(levels_lo)   # (L, N, dim)
+    tbl_hi = jnp.stack(levels_hi)
+
+    length = last - first + 1
+    k = 31 - M._clz32(length.astype(jnp.uint32))          # floor(log2(len))
+    off = last - (jnp.int32(1) << k) + 1
+    lo = jnp.minimum(tbl_lo[k, first], tbl_lo[k, off])
+    hi = jnp.maximum(tbl_hi[k, first], tbl_hi[k, off])
+    return lo, hi
+
+
+def _refit_iterative(leaf_lo, leaf_hi, left_child, right_child):
+    """Readiness-fixpoint refit: O(tree-height) masked passes. Used when the
+    sparse table would not fit memory (N > ~2^21)."""
+    n = leaf_lo.shape[0]
+    ni = n - 1
+    node_lo = jnp.concatenate([jnp.full((ni, leaf_lo.shape[1]), jnp.inf, leaf_lo.dtype), leaf_lo])
+    node_hi = jnp.concatenate([jnp.full((ni, leaf_hi.shape[1]), -jnp.inf, leaf_hi.dtype), leaf_hi])
+    ready = jnp.concatenate([jnp.zeros((ni,), bool), jnp.ones((n,), bool)])
+
+    def cond(c):
+        _, _, ready = c
+        return ~jnp.all(ready[:ni])
+
+    def body(c):
+        node_lo, node_hi, ready = c
+        lr, rr = ready[left_child], ready[right_child]
+        can = lr & rr & ~ready[:ni]
+        new_lo = jnp.minimum(node_lo[left_child], node_lo[right_child])
+        new_hi = jnp.maximum(node_hi[left_child], node_hi[right_child])
+        node_lo = node_lo.at[:ni].set(jnp.where(can[:, None], new_lo, node_lo[:ni]))
+        node_hi = node_hi.at[:ni].set(jnp.where(can[:, None], new_hi, node_hi[:ni]))
+        ready = ready.at[:ni].set(ready[:ni] | can)
+        return node_lo, node_hi, ready
+
+    node_lo, node_hi, _ = jax.lax.while_loop(cond, body, (node_lo, node_hi, ready))
+    return node_lo[:ni], node_hi[:ni]
+
+
+@partial(jax.jit, static_argnames=("bits", "refit"))
+def build(boxes: Boxes, *, bits: int = 64, refit: str = "rmq") -> LBVH:
+    """Build an LBVH over N >= 2 leaf boxes.
+
+    bits: 32 or 64 (Morton code width, §2.6 — 64 is the 2.0 default).
+    refit: "rmq" (sparse table) or "iterative" (readiness fixpoint).
+    """
+    leaf_lo_u, leaf_hi_u = boxes.lo, boxes.hi
+    n, dim = leaf_lo_u.shape
+    if n < 2:
+        raise ValueError("LBVH requires N >= 2 (BVH API handles N in {0,1})")
+    max_log2 = max((n - 1).bit_length(), 1)
+
+    centroids = 0.5 * (leaf_lo_u + leaf_hi_u)
+    scene_lo, scene_hi = centroids.min(0), centroids.max(0)
+    if bits == 64:
+        codes = M.morton64(centroids, scene_lo, scene_hi)
+    else:
+        codes = M.morton32(centroids, scene_lo, scene_hi)
+    perm0 = jnp.arange(n, dtype=jnp.int32)
+    codes_s, perm = M.sort_by_morton(codes, perm0)
+    hi, lo, idx = M.combined_delta_key(codes_s, n)
+
+    leaf_lo = leaf_lo_u[perm]
+    leaf_hi = leaf_hi_u[perm]
+
+    first, last, gamma = _karras_ranges(hi, lo, idx, n, max_log2)
+
+    # Apetrei-style O(1) linking from ranges+split: child at gamma / gamma+1
+    # is a leaf exactly when it coincides with the range end.
+    left_child = jnp.where(gamma == first, (n - 1) + gamma, gamma).astype(jnp.int32)
+    right_child = jnp.where(gamma + 1 == last, (n - 1) + gamma + 1, gamma + 1).astype(jnp.int32)
+
+    if refit == "rmq":
+        int_lo, int_hi = _refit_rmq(leaf_lo, leaf_hi, first, last, max_log2)
+    else:
+        int_lo, int_hi = _refit_iterative(leaf_lo, leaf_hi, left_child, right_child)
+    node_lo = jnp.concatenate([int_lo, leaf_lo], 0)
+    node_hi = jnp.concatenate([int_hi, leaf_hi], 0)
+
+    # ropes in closed form: split positions gamma are a bijection onto
+    # [0, N-2]; the node after subtree [f, l] is right_child(owner(l)).
+    split_owner = jnp.zeros((n - 1,), jnp.int32).at[gamma].set(jnp.arange(n - 1, dtype=jnp.int32))
+    leaf_pos = jnp.arange(n, dtype=jnp.int32)
+    range_last = jnp.concatenate([last, leaf_pos]).astype(jnp.int32)
+    safe_last = jnp.clip(range_last, 0, n - 2)
+    rope = jnp.where(range_last >= n - 1, SENTINEL,
+                     right_child[split_owner[safe_last]]).astype(jnp.int32)
+
+    return LBVH(node_lo, node_hi, left_child, right_child, rope,
+                range_last, perm.astype(jnp.int32))

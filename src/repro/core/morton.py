@@ -1,0 +1,124 @@
+"""Morton (Z-order) codes, 32-bit and 64-bit (§2.6: "Morton codes used during
+the construction changed from 32-bit to 64-bit by default").
+
+JAX runs with x64 disabled, so 64-bit codes are represented as a (hi, lo)
+pair of uint32 lanes and sorted lexicographically with
+``jax.lax.sort(..., num_keys=2)`` — the TPU-native spelling of a 64-bit
+radix sort (XLA's sort is our "vendor sort", §2.6 bullet 6).
+
+Dimension-generic (1-10): bits_per_dim = total_bits // dim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize", "morton32", "morton64", "sort_by_morton"]
+
+
+def quantize(coords: jax.Array, lo: jax.Array, hi: jax.Array, bits: int) -> jax.Array:
+    """Normalize coords (N, dim) into integer grid [0, 2^bits - 1] (uint32)."""
+    extent = jnp.maximum(hi - lo, 1e-30)
+    x = (coords - lo) / extent
+    scale = jnp.float32((1 << bits) - 1)
+    q = jnp.clip(x * scale, 0.0, scale)
+    return q.astype(jnp.uint32)
+
+
+def _interleave(q: jax.Array, bits: int, total_bits: int):
+    """Bit-interleave q (N, dim) of uint32 -> (hi, lo) uint32 code lanes.
+
+    Output bit position of input (dim k, bit j) is ``j * dim + k`` — dim 0 is
+    the least significant, matching the classic Morton layout.
+    """
+    n, dim = q.shape
+    hi = jnp.zeros((n,), jnp.uint32)
+    lo = jnp.zeros((n,), jnp.uint32)
+    for j in range(bits):
+        for k in range(dim):
+            p = j * dim + k
+            if p >= total_bits:
+                continue
+            bit = (q[:, k] >> jnp.uint32(j)) & jnp.uint32(1)
+            if p < 32:
+                lo = lo | (bit << jnp.uint32(p))
+            else:
+                hi = hi | (bit << jnp.uint32(p - 32))
+    return hi, lo
+
+
+def morton32(coords: jax.Array, scene_lo=None, scene_hi=None):
+    """32-bit Morton codes. Returns (N,) uint32. bits_per_dim = 32 // dim
+    (dim=3 -> 10 bits, the pre-2.0 ArborX default)."""
+    if scene_lo is None:
+        scene_lo = coords.min(0)
+    if scene_hi is None:
+        scene_hi = coords.max(0)
+    dim = coords.shape[-1]
+    bits = max(32 // dim, 1)
+    q = quantize(coords, scene_lo, scene_hi, bits)
+    _, lo = _interleave(q, bits, 32)
+    return lo
+
+
+def morton64(coords: jax.Array, scene_lo=None, scene_hi=None):
+    """64-bit Morton codes as (hi, lo) uint32 pair. bits_per_dim = 63 // dim
+    for dim<=6 capped at 21 (dim=3 -> 21 bits, the ArborX 2.0 default)."""
+    if scene_lo is None:
+        scene_lo = coords.min(0)
+    if scene_hi is None:
+        scene_hi = coords.max(0)
+    dim = coords.shape[-1]
+    bits = min(64 // dim, 21) if dim <= 6 else 64 // dim
+    q = quantize(coords, scene_lo, scene_hi, bits)
+    return _interleave(q, bits, 64)
+
+
+def sort_by_morton(codes, aux: jax.Array):
+    """Sort by Morton code; codes either (lo,) uint32 or (hi, lo) pair.
+
+    Returns (sorted_codes, permuted_aux). Stable, lexicographic on (hi, lo).
+    """
+    if isinstance(codes, tuple):
+        hi, lo = codes
+        hi_s, lo_s, aux_s = jax.lax.sort((hi, lo, aux), num_keys=2, is_stable=True)
+        return (hi_s, lo_s), aux_s
+    code_s, aux_s = jax.lax.sort((codes, aux), num_keys=1, is_stable=True)
+    return code_s, aux_s
+
+
+def combined_delta_key(codes, n: int):
+    """Produce per-leaf comparable keys for the LBVH "delta" computation.
+
+    For duplicate Morton codes ArborX augments the code with the index
+    (Karras §4) to make keys unique; we return (hi, lo_with_tiebreak) where a
+    duplicate-resolution lane of the *sorted position* is appended as a third
+    lane. The delta function then counts common leading bits across the
+    concatenated (hi, lo, idx) 96-bit key.
+    """
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    if isinstance(codes, tuple):
+        hi, lo = codes
+    else:
+        hi, lo = jnp.zeros_like(codes), codes
+    return hi, lo, idx
+
+
+def _clz32(x: jax.Array) -> jax.Array:
+    """Count leading zeros of uint32 lanes (32 for x == 0)."""
+    return jax.lax.clz(jax.lax.bitcast_convert_type(x, jnp.int32))
+
+
+def delta_from_keys(hi, lo, idx):
+    """delta(i) = length of common prefix of keys i and i+1 (Karras/Apetrei).
+
+    Keys are 96-bit (hi:32 | lo:32 | idx:32). Returns (N-1,) int32; larger
+    delta = longer common prefix = closer in Morton order.
+    """
+    hi_x = hi[:-1] ^ hi[1:]
+    lo_x = lo[:-1] ^ lo[1:]
+    ix_x = idx[:-1] ^ idx[1:]
+    d_hi = _clz32(hi_x)
+    d_lo = 32 + _clz32(lo_x)
+    d_ix = 64 + _clz32(ix_x)
+    return jnp.where(hi_x != 0, d_hi, jnp.where(lo_x != 0, d_lo, d_ix))

@@ -1,0 +1,3 @@
+from .pipeline import TokenPipeline, point_cloud, synthetic_batch
+
+__all__ = ["TokenPipeline", "synthetic_batch", "point_cloud"]

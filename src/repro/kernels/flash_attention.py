@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: flash attention with GQA and sliding-window support.
+
+The LM substrate's compute hot-spot. Online-softmax accumulation over KV
+panels; per-(batch, head, q-block) running (m, l, acc) state lives in VMEM
+scratch across the sequential KV grid axis.
+
+GQA: query head h reads KV head h // group via the k/v BlockSpec index
+maps — no jnp.repeat materialization.
+
+Masks (computed from grid indices, right-aligned so Sq < Skv decodes
+work): causal, optional sliding window (Mixtral/LLaVA SWA), and KV-length
+padding. Fully-masked KV panels are predicated out with pl.when — for
+causal attention this halves the FLOPs actually issued, which is exactly
+the win the roofline analysis credits the kernel with.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  bq: int, bk: int, skv_actual: int, sq: int, skv: int,
+                  causal: bool, window: int | None, scale: float,
+                  num_kv: int):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # block-level skip test (right-aligned positions)
+    q_last = i * bq + bq - 1 + (skv_actual - sq)     # highest q position
+    q_first = i * bq + (skv_actual - sq)
+    kv_first = j * bk
+    kv_last = j * bk + bk - 1
+    live = jnp.bool_(True)
+    if causal:
+        live &= kv_first <= q_last
+    if window is not None:
+        live &= kv_last > q_first - window
+    live &= kv_first < skv_actual
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale   # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bq, bk)
+
+        qpos = (i * bq + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+                + (skv_actual - sq))
+        kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < skv_actual
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_scr[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_cur
+
+    @pl.when(j == num_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: int | None = None,
+                           skv_actual: int | None = None,
+                           sq_actual: int | None = None,
+                           scale: float | None = None,
+                           bq: int = 128, bk: int = 128,
+                           interpret: bool = False):
+    """q (B, Hq, Sq, D), k/v (B, Hkv, Skv, D); Sq % bq == 0, Skv % bk == 0
+    (ops.py pads; sq_actual/skv_actual are the TRUE lengths used for the
+    right-aligned position math); D should be a lane multiple for the MXU.
+    Returns (B, Hq, Sq, D) in q.dtype."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert sq % bq == 0 and skv % bk == 0
+    g = hq // hkv
+    if skv_actual is None:
+        skv_actual = skv
+    if sq_actual is None:
+        sq_actual = sq
+    if scale is None:
+        scale = float(1.0 / (d ** 0.5))
+    num_kv = skv // bk
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, skv_actual=skv_actual, sq=sq_actual, skv=skv,
+        causal=causal, window=window, scale=scale, num_kv=num_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, sq // bq, num_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, i, j, g=g: (b_, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, i, j, g=g: (b_, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

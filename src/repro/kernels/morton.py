@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: 64-bit Morton encoding (§2.6 bullet 1).
+
+Quantization + bit interleave are pure VPU integer ops; the kernel tiles
+points into (bn, dim) VMEM blocks and emits the (hi, lo) uint32 lane pair
+per point (x64 stays off — DESIGN.md §2). Scene bounds arrive as a (1, dim)
+block broadcast to every grid step.
+
+The interleave loop is fully unrolled at trace time (bits x dim static
+iterations of shift/or) — no data-dependent control flow anywhere.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _morton_kernel(coords_ref, lo_ref, hi_ref, out_hi_ref, out_lo_ref,
+                   *, bits: int, dim: int):
+    c = coords_ref[...].astype(jnp.float32)        # (bn, dim_p)
+    lo = lo_ref[...].astype(jnp.float32)           # (1, dim_p)
+    hi = hi_ref[...].astype(jnp.float32)
+
+    extent = jnp.maximum(hi - lo, 1e-30)
+    scale = jnp.float32((1 << bits) - 1)
+    q = jnp.clip((c - lo) / extent * scale, 0.0, scale).astype(jnp.uint32)
+
+    n = q.shape[0]
+    out_hi = jnp.zeros((n,), jnp.uint32)
+    out_lo = jnp.zeros((n,), jnp.uint32)
+    for j in range(bits):
+        for kdim in range(dim):
+            p = j * dim + kdim
+            if p >= 64:
+                continue
+            bit = (q[:, kdim] >> jnp.uint32(j)) & jnp.uint32(1)
+            if p < 32:
+                out_lo = out_lo | (bit << jnp.uint32(p))
+            else:
+                out_hi = out_hi | (bit << jnp.uint32(p - 32))
+    out_hi_ref[...] = out_hi
+    out_lo_ref[...] = out_lo
+
+
+def morton64_pallas(coords, scene_lo, scene_hi, *, bn: int = 1024,
+                    interpret: bool = False):
+    """coords (N, dim) float, N % bn == 0 (ops.py pads; padded rows clamp
+    to scene bounds and are sliced off). Returns (hi, lo) uint32 (N,)."""
+    n, dim = coords.shape
+    assert n % bn == 0
+    bits = min(64 // dim, 21) if dim <= 6 else 64 // dim
+
+    kernel = functools.partial(_morton_kernel, bits=bits, dim=dim)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, dim), lambda i: (i, 0)),
+            pl.BlockSpec((1, dim), lambda i: (0, 0)),
+            pl.BlockSpec((1, dim), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(coords, scene_lo.reshape(1, dim), scene_hi.reshape(1, dim))

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each `*_ref` is the semantic ground truth: tests sweep shapes/dtypes and
+assert the kernels (run in interpret mode on CPU) match these exactly
+(or within float tolerance).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --- morton -----------------------------------------------------------------
+
+def morton64_ref(coords, scene_lo, scene_hi):
+    """(N, dim) float -> (hi, lo) uint32 pair of 64-bit Morton codes.
+    Delegates to the core implementation (itself validated vs numpy)."""
+    from repro.core import morton as M
+    return M.morton64(coords, scene_lo, scene_hi)
+
+
+# --- brute-force knn ----------------------------------------------------------
+
+def bruteforce_knn_ref(queries, points, k: int):
+    """Exact k smallest euclidean distances. Returns (d, idx): (Q, k),
+    ascending, ties broken by index (top_k on (-d) is index-stable)."""
+    d2 = (jnp.sum(queries**2, -1, keepdims=True)
+          - 2.0 * queries @ points.T
+          + jnp.sum(points**2, -1)[None, :])
+    d2 = jnp.maximum(d2, 0.0)
+    neg, idx = jax.lax.top_k(-d2, k)
+    return jnp.sqrt(-neg), idx.astype(jnp.int32)
+
+
+# --- ray-box nearest ----------------------------------------------------------
+
+def ray_box_nearest_ref(origins, directions, box_lo, box_hi):
+    """For each ray the smallest entry parameter t over all boxes and its
+    box index. Returns (t, idx): (R,), t=inf / idx=-1 on miss."""
+    from repro.core.geometry import ray_box
+    hit, t = ray_box(origins[:, None, :], directions[:, None, :],
+                     box_lo[None, :, :], box_hi[None, :, :])   # (R, B)
+    t = jnp.where(hit, t, jnp.inf)
+    idx = jnp.argmin(t, axis=1).astype(jnp.int32)
+    tmin = jnp.min(t, axis=1)
+    return tmin, jnp.where(jnp.isfinite(tmin), idx, -1)
+
+
+# --- flash attention ----------------------------------------------------------
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  scale: float | None = None):
+    """(B, Hq, Sq, D) x (B, Hkv, Skv, D) -> (B, Hq, Sq, D). GQA by head
+    repetition; optional causal and sliding-window masks; fp32 softmax."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    skv = k.shape[2]
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)   # right-aligned (decode ok)
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

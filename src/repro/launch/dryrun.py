@@ -1,0 +1,221 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input-shape) cell against the production meshes and
+extract the roofline terms from the compiled artifact.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k [--multi-pod] [--out experiments/dryrun]
+
+Per cell this prints/records:
+  memory_analysis  — per-device argument/output/temp bytes (proves fit)
+  cost_analysis    — HLO FLOPs / bytes accessed
+  collectives      — bytes by collective kind, parsed from the compiled
+                     HLO (the SPMD-partitioned per-device module)
+
+v5e constants for the derived roofline terms: 197 TF/s bf16, 819 GB/s
+HBM, ~50 GB/s/link ICI (EXPERIMENTS.md §Roofline).
+"""
+import argparse
+import json
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import all_archs, get_config
+from repro.launch import sharding as SH
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (SHAPES, build_step, cache_struct,
+                                cell_applicable, input_specs, opt_struct,
+                                params_struct)
+from repro.models.layers import set_sharding_rules
+
+# v5e (target hardware) constants
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link (per chip, one direction)
+
+# per-arch training knobs that make the big models fit (DESIGN.md §5)
+TRAIN_KNOBS = {
+    # moe_impl="gather" adopted from the §Perf hillclimb (iteration 4):
+    # inverse-slot-map dispatch — no (T,E,C) one-hot, no 10 GB/layer
+    # gathers, drop-identical to the dense reference
+    "deepseek-v3-671b": dict(n_micro=16, opt_dtype=jnp.bfloat16, fsdp=True,
+                             accum_dtype=jnp.bfloat16, moe_impl="gather"),
+    "mixtral-8x22b": dict(n_micro=8, opt_dtype=jnp.bfloat16, fsdp=True,
+                          accum_dtype=jnp.bfloat16, moe_impl="gather"),
+    "llava-next-mistral-7b": dict(n_micro=4, opt_dtype=jnp.float32, fsdp=True),
+    "starcoder2-7b": dict(n_micro=4, opt_dtype=jnp.float32, fsdp=True),
+    "chatglm3-6b": dict(n_micro=4, opt_dtype=jnp.float32, fsdp=True),
+    "zamba2-7b": dict(n_micro=8, opt_dtype=jnp.float32, fsdp=True),
+    "phi3-mini-3.8b": dict(n_micro=4, opt_dtype=jnp.float32, fsdp=True),
+    "tinyllama-1.1b": dict(n_micro=2, opt_dtype=jnp.float32, fsdp=True),
+    "seamless-m4t-medium": dict(n_micro=2, opt_dtype=jnp.float32, fsdp=True),
+    "mamba2-780m": dict(n_micro=4, opt_dtype=jnp.float32, fsdp=True),
+}
+DEFAULT_KNOBS = dict(n_micro=1, opt_dtype=jnp.float32, fsdp=False)
+for _k in TRAIN_KNOBS.values():
+    _k.setdefault("accum_dtype", jnp.float32)
+
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             verbose: bool = True, knobs_override: dict | None = None):
+    import dataclasses
+    cfg = get_config(arch)
+    knobs = dict(TRAIN_KNOBS.get(arch, DEFAULT_KNOBS))
+    if knobs_override:
+        knobs.update(knobs_override)
+    # knob entries naming ModelConfig fields override the config
+    # (moe_impl, ssm_chunk, ... — the hillclimb levers)
+    cfg_fields = {f.name for f in dataclasses.fields(cfg)}
+    cfg_over = {k: v for k, v in knobs.items() if k in cfg_fields}
+    if cfg_over:
+        cfg = dataclasses.replace(cfg, **cfg_over)
+    ok, reason = cell_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+
+    cell = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    set_sharding_rules(SH.logical_rules(mesh), mesh)
+    try:
+        t0 = time.time()
+
+        pstruct = params_struct(cfg)
+        pspecs = SH.param_specs(pstruct, mesh,
+                                expert_2d=bool(knobs.get("expert_2d")))
+        if knobs["fsdp"]:
+            pspecs = SH.zero1_specs(pspecs, pstruct, mesh)
+        batch = input_specs(cfg, shape)
+        bspec = {}
+        for k, v in batch.items():
+            bs = SH.batch_spec(mesh, v.shape[0])    # P((dp,)) or P()
+            dims = list(bs) + [None] * (v.ndim - len(bs))
+            bspec[k] = jax.sharding.PartitionSpec(*dims)
+
+        if cell.mode == "train":
+            ostruct = opt_struct(cfg, pstruct, knobs["opt_dtype"])
+            ospecs = {"step": jax.sharding.PartitionSpec(),
+                      "m": SH.zero1_specs(pspecs, pstruct, mesh),
+                      "v": SH.zero1_specs(pspecs, pstruct, mesh)}
+            step = build_step(cfg, "train", n_micro=knobs["n_micro"],
+                              opt_dtype=knobs["opt_dtype"],
+                              accum_dtype=knobs.get("accum_dtype",
+                                                    jnp.float32))
+            jitted = jax.jit(
+                step,
+                in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, ospecs),
+                              SH.named(mesh, bspec)),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(pstruct, ostruct, batch)
+        elif cell.mode == "prefill":
+            step = build_step(cfg, "prefill")
+            jitted = jax.jit(step, in_shardings=(SH.named(mesh, pspecs),
+                                                 SH.named(mesh, bspec)))
+            lowered = jitted.lower(pstruct, batch)
+        else:
+            cstruct = cache_struct(cfg, shape)
+            cspecs = SH.cache_specs(cfg, cstruct, mesh, cell.global_batch)
+            step = build_step(cfg, "decode")
+            jitted = jax.jit(
+                step,
+                in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, cspecs),
+                              SH.named(mesh, bspec)),
+                donate_argnums=(1,))
+            lowered = jitted.lower(pstruct, cstruct, batch)
+
+        compiled = lowered.compile()
+        t1 = time.time()
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        chips = 512 if multi_pod else 256
+        # trip-count-aware analysis (XLA cost_analysis visits while bodies
+        # once — see hloanalysis docstring)
+        from repro.launch.hloanalysis import analyze
+        ana = analyze(compiled.as_text())
+
+        rec.update(
+            status="ok", compile_s=round(t1 - t0, 1), chips=chips,
+            mode=cell.mode,
+            # memory_analysis is PER DEVICE on the partitioned module
+            arg_bytes=int(getattr(mem, "argument_size_in_bytes", 0)),
+            out_bytes=int(getattr(mem, "output_size_in_bytes", 0)),
+            temp_bytes=int(getattr(mem, "temp_size_in_bytes", 0)),
+            peak_bytes=int(getattr(mem, "temp_size_in_bytes", 0))
+                + int(getattr(mem, "argument_size_in_bytes", 0)),
+            flops_per_device=float(ana["flops"]),
+            hlo_bytes_per_device=float(ana["hbm_bytes"]),
+            xla_flops_body_once=float(cost.get("flops", 0.0)),
+            xla_bytes_body_once=float(cost.get("bytes accessed", 0.0)),
+            collective_bytes=ana["collectives"],
+            collective_total=float(ana["collective_bytes"]),
+            top_collectives=[list(t) for t in
+                             ana.get("top_collectives", [])],
+            top_hbm=[list(t) for t in ana.get("top_hbm", [])],
+            knobs={k: str(v) for k, v in knobs.items()},
+        )
+        # roofline terms (seconds)
+        rec["t_compute"] = rec["flops_per_device"] / PEAK_FLOPS
+        rec["t_memory"] = rec["hlo_bytes_per_device"] / HBM_BW
+        rec["t_collective"] = rec["collective_total"] / ICI_BW
+        terms = {"compute": rec["t_compute"], "memory": rec["t_memory"],
+                 "collective": rec["t_collective"]}
+        rec["bottleneck"] = max(terms, key=terms.get)
+        if verbose:
+            print(f"[{arch} / {shape} / {rec['mesh']}] OK "
+                  f"compile={rec['compile_s']}s peak/dev="
+                  f"{rec['peak_bytes']/2**30:.2f}GiB "
+                  f"flops/dev={rec['flops_per_device']:.3e} "
+                  f"bottleneck={rec['bottleneck']}")
+            print("  memory_analysis:", {k: rec[k] for k in
+                  ("arg_bytes", "out_bytes", "temp_bytes")})
+            print("  cost_analysis: flops=%.3e bytes=%.3e" %
+                  (rec["flops_per_device"], rec["hlo_bytes_per_device"]))
+            print("  collectives:", {k: f"{v/2**20:.1f}MiB"
+                                     for k, v in ana["collectives"].items()})
+    except Exception as e:  # noqa: BLE001 — record failures, keep sweeping
+        rec["status"] = "failed"
+        rec["error"] = f"{type(e).__name__}: {e}"[:2000]
+        if verbose:
+            print(f"[{arch} / {shape} / {rec['mesh']}] FAILED: {rec['error']}")
+    finally:
+        set_sharding_rules(None)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = all_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, multi_pod=mp)
+                tag = f"{arch}__{shape}__{'mp' if mp else 'sp'}.json"
+                with open(os.path.join(args.out, tag), "w") as f:
+                    json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,260 @@
+"""Trip-count-aware analysis of compiled (SPMD-partitioned) HLO text.
+
+XLA's built-in ``cost_analysis`` visits ``while`` bodies ONCE, so any
+scan-over-layers model under-counts FLOPs/bytes/collectives by ~n_layers.
+This analyzer rebuilds the call graph from ``compiled.as_text()``,
+propagates multiplicities through ``while`` ops using their
+``known_trip_count`` backend config, and accumulates:
+
+  * flops        — exact for dot/convolution-free models: dots counted as
+                   2 * prod(result) * prod(contracting dims); fusions and
+                   other elementwise ops at 1 flop/element (minor term)
+  * hbm_bytes    — streaming model over the scheduled, fused module:
+                   every non-bookkeeping top-level instruction reads its
+                   operands and writes its result once (fusion internals
+                   excluded — they live in registers/VMEM)
+  * collectives  — result bytes by kind (all-gather / all-reduce /
+                   reduce-scatter / all-to-all / collective-permute)
+
+All numbers are PER DEVICE: the compiled module is the per-partition
+program. Multiply by chip count for cluster totals.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
+
+_BOOKKEEPING = {"parameter", "constant", "get-tuple-element", "tuple",
+                "bitcast", "after-all", "iota"}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(.*->")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(r"\]\S*\s+([a-z][a-z0-9\-]*)\(")
+_CALL_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count[\\"]*:?=?\s*[{\\"]*\s*[\\"]?n[\\"]?:?\s*[\\"]?(\d+)')
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_TUPLE_SHAPES_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype, shape_str):
+    n = 1
+    for tok in shape_str.split(","):
+        if tok:
+            n *= int(tok)
+    return n * _DTYPE_BYTES.get(dtype, 4), n
+
+
+class Instruction:
+    __slots__ = ("name", "dtype", "shape", "op", "line", "bytes", "elems")
+
+    def __init__(self, name, dtype, shape, op, line):
+        self.name, self.dtype, self.shape, self.op, self.line = \
+            name, dtype, shape, op, line
+        self.bytes, self.elems = _shape_bytes(dtype, shape)
+
+
+def parse(hlo_text: str):
+    """-> (computations: {name: [Instruction]}, entry_name)."""
+    comps: dict[str, list[Instruction]] = {}
+    entry = None
+    cur = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        m = _COMP_RE.match(line)
+        if m and line.endswith("{"):
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        mi = _INSTR_RE.match(line)
+        if mi:
+            name, dtype, shape = mi.groups()
+            mo = _OP_RE.search(line)
+            op = mo.group(1) if mo else "unknown"
+            comps[cur].append(Instruction(name, dtype, shape, op, line))
+    return comps, entry
+
+
+def _multiplicities(comps, entry):
+    mult = defaultdict(float)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    # BFS through call sites, scaling by while trip counts
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        m = mult[cname]
+        for ins in comps.get(cname, []):
+            trip = 1.0
+            if ins.op == "while":
+                mt = _TRIP_RE.search(ins.line)
+                trip = float(mt.group(1)) if mt else 1.0
+            for callee in _CALL_RE.findall(ins.line):
+                if callee in comps:
+                    mult[callee] += m * trip
+                    if callee not in seen:
+                        seen.add(callee)
+                        order.append(callee)
+            mb = _BRANCH_RE.search(ins.line)
+            if mb:
+                for callee in _OPERANDS_RE.findall(mb.group(1)):
+                    if callee in comps:
+                        mult[callee] += m
+                        if callee not in seen:
+                            seen.add(callee)
+                            order.append(callee)
+    return mult
+
+
+def _dot_flops(ins, symtab):
+    ops = ins.line.split("(", 1)[1]
+    names = _OPERANDS_RE.findall(ops.split(")", 1)[0])
+    mc = _CONTRACT_RE.search(ins.line)
+    if not names or mc is None:
+        return 2 * ins.elems
+    lhs = symtab.get(names[0])
+    if lhs is None:
+        return 2 * ins.elems
+    lhs_shape = [int(t) for t in lhs.shape.split(",") if t]
+    k = 1
+    for d in mc.group(1).split(","):
+        if d:
+            di = int(d)
+            if di < len(lhs_shape):
+                k *= lhs_shape[di]
+    return 2 * ins.elems * k
+
+
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+
+
+def _fusion_param_costs(instrs):
+    """Bytes actually READ per fusion parameter: a parameter consumed
+    (only) through a dynamic-slice charges the slice, not the full array
+    (the scan-over-layers weight indexing pattern)."""
+    params = {}
+    for ins in instrs:
+        if ins.op == "parameter":
+            m = _PARAM_IDX_RE.search(ins.line)
+            if m:
+                params[ins.name] = (int(m.group(1)), ins.bytes)
+    costs = {i: b for i, b in params.values()}
+    for ins in instrs:
+        if ins.op in ("dynamic-slice", "slice"):
+            names = _OPERANDS_RE.findall(
+                ins.line.split("(", 1)[1].split(")", 1)[0])
+            if names and names[0] in params:
+                idx, _ = params[names[0]]
+                costs[idx] = min(costs[idx], ins.bytes)
+    return costs
+
+
+def analyze(hlo_text: str) -> dict:
+    comps, entry = parse(hlo_text)
+    if entry is None:
+        return {"flops": 0.0, "hbm_bytes": 0.0, "collectives": {}}
+    mult = _multiplicities(comps, entry)
+
+    flops = 0.0
+    hbm = 0.0
+    coll = defaultdict(float)
+    fusion_names = set()
+    fusion_of = {}
+    # fusion computations (called via calls= from fusion instrs) hold
+    # register-resident internals: excluded from the HBM stream model
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            if ins.op == "fusion":
+                for callee in _CALL_RE.findall(ins.line):
+                    fusion_names.add(callee)
+                    fusion_of[(cname, ins.name)] = callee
+    param_costs = {name: _fusion_param_costs(instrs)
+                   for name, instrs in comps.items()}
+
+    for cname, instrs in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        symtab = {ins.name: ins for ins in instrs}
+        in_fusion = cname in fusion_names
+        for ins in instrs:
+            if ins.op == "dot":
+                flops += m * _dot_flops(ins, symtab)
+            elif ins.op in ("fusion", "add", "multiply", "divide", "subtract",
+                            "exponential", "tanh", "rsqrt", "maximum",
+                            "minimum", "compare", "select", "convert",
+                            "reduce", "reduce-window"):
+                flops += m * ins.elems
+            if ins.op in _COLLECTIVES:
+                coll[ins.op] += m * ins.bytes
+            if in_fusion:
+                continue
+            if ins.op in _BOOKKEEPING or ins.op == "while":
+                continue
+            # streaming model: write result once, read operands once
+            # (dynamic-slice-through-fusion reads charge the slice only)
+            op_bytes = ins.bytes
+            names = _OPERANDS_RE.findall(
+                ins.line.split("(", 1)[1].split(")", 1)[0]) \
+                if "(" in ins.line else []
+            callee = fusion_of.get((cname, ins.name))
+            costs = param_costs.get(callee, {}) if callee else {}
+            for pos, nm in enumerate(names):
+                src = symtab.get(nm)
+                if src is not None:
+                    op_bytes += costs.get(pos, src.bytes) \
+                        if callee else src.bytes
+            hbm += m * op_bytes
+
+    # largest collective / HBM contributors (§Perf attribution)
+    top = []
+    top_hbm = []
+    for cname, instrs in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0 or cname in fusion_names:
+            continue
+        symtab = {ins.name: ins for ins in instrs}
+        for ins in instrs:
+            meta = ins.line.split(", metadata")
+            opname = ""
+            if len(meta) > 1 and "op_name=" in meta[1]:
+                opname = meta[1].split('op_name="')[1].split('"')[0][-80:]
+            if ins.op in _COLLECTIVES:
+                top.append((m * ins.bytes, ins.op,
+                            f"{ins.dtype}[{ins.shape}]", m,
+                            opname or ins.line.split("metadata")[0][-100:]))
+            if ins.op not in _BOOKKEEPING and ins.op != "while":
+                b = ins.bytes
+                names = _OPERANDS_RE.findall(
+                    ins.line.split("(", 1)[1].split(")", 1)[0]) \
+                    if "(" in ins.line else []
+                for nm in names:
+                    src = symtab.get(nm)
+                    if src is not None:
+                        b += src.bytes
+                top_hbm.append((m * b, ins.op, f"{ins.dtype}[{ins.shape}]",
+                                m, opname))
+    top.sort(reverse=True)
+    top_hbm.sort(reverse=True)
+
+    return {"flops": flops, "hbm_bytes": hbm, "collectives": dict(coll),
+            "collective_bytes": float(sum(coll.values())),
+            "top_collectives": top[:12], "top_hbm": top_hbm[:12]}

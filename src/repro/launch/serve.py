@@ -1,0 +1,66 @@
+"""Batched serving driver: prefill a batch of prompts, then decode with a
+shared KV cache — the inference-side end-to-end example.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --smoke --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm, serve
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    key = jax.random.PRNGKey(args.seed)
+    params = lm.init_params(cfg, key)
+    max_len = args.prompt_len + args.gen
+
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab)
+    cache = serve.init_cache(cfg, args.batch, max_len,
+                             dtype=jnp.dtype(cfg.dtype))
+    if cfg.family == "encdec":
+        src = jax.random.normal(key, (args.batch, 16, cfg.d_model),
+                                jnp.dtype(cfg.dtype))
+        cache = serve.prefill_encoder(cfg, params, cache, src)
+
+    t0 = time.time()
+    cache, logits = serve.prefill(cfg, params, cache, prompts)
+    t1 = time.time()
+
+    decode = jax.jit(lambda p, c, t: serve.decode_step(cfg, p, c, t))
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    out = [tok]
+    for _ in range(args.gen - 1):
+        lg, cache = decode(params, cache, tok)
+        tok = jnp.argmax(lg[:, -1:], axis=-1).astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t2 = time.time()
+
+    gen = jnp.concatenate(out, axis=1)
+    print("generated shape:", gen.shape)
+    print(f"prefill: {t1-t0:.2f}s  decode: {(t2-t1)/max(args.gen-1,1)*1e3:.1f} "
+          f"ms/token  ({args.batch} seqs)")
+    return np.asarray(gen)
+
+
+if __name__ == "__main__":
+    main()

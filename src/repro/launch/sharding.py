@@ -1,0 +1,201 @@
+"""Sharding rules: logical axes -> mesh axes, parameter PartitionSpecs,
+ZeRO-1 optimizer-state specs, batch/cache specs.
+
+Megatron-style TP over the "model" axis (column then row parallel),
+DP over ("pod", "data"). A dimension is sharded only when divisible by
+the axis size — e.g. chatglm3's kv=2 heads replicate on a 16-way model
+axis while its 32 q heads shard (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+# parameter-name -> (axis index to shard over "model")
+# column-parallel (+1 = last dim) / row-parallel (0 = first dim)
+_COL = {"wq", "wk", "wv", "wg", "wu", "w_uq", "w_uk", "w_uv",
+        "wz", "wx", "wdt", "patch_proj", "proj"}
+_ROW = {"wo", "wd", "out_proj"}
+_EXPERT = {"wg", "wu", "wd"}          # when ndim == 3 (E, ., .)
+_VOCAB = {"table"}
+_CONV = {"conv_wx"}                   # (K, di): shard channel axis
+
+
+def _div(n, size):
+    return n % size == 0
+
+
+def logical_rules(mesh) -> dict:
+    """Rules for activation constraints (models.layers.shard)."""
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    return {"batch": dp, "heads": "model", "kv_heads": None,
+            "ffn": "model", "experts": "model", "vocab": "model"}
+
+
+def param_spec(path_names, leaf, mesh, *, expert_2d: bool = False) -> P:
+    """PartitionSpec for one parameter from its pytree path.
+
+    expert_2d: shard MoE expert weights over BOTH mesh axes — experts on
+    "model", the ffn dim on "data". Weights then never all-gather for
+    compute; instead the (tokens, d) activations psum over "data", which
+    at microbatched token counts is orders of magnitude less traffic than
+    FSDP weight gathers (§Perf deepseek iteration)."""
+    msize = mesh.shape["model"]
+    dsize = mesh.shape["data"]
+    name = path_names[-1]
+    nd = leaf.ndim
+    # stacked-layer leading axes (scan) are never sharded; find how many
+    # leading axes belong to stacking by matching against base ranks
+    base = {"table": 2, "scale": 1, "bias": 1, "a_log": 1, "dt_bias": 1,
+            "d_skip": 1, "norm_scale": 1, "conv_b": 1, "router": 2,
+            "conv_wx": 2, "conv_wb": 2, "conv_wc": 2}
+    if name in _EXPERT and nd >= 3 and path_names[-2] == "moe":
+        base_rank = 3
+    elif name in base:
+        base_rank = base[name]
+    else:
+        base_rank = 2
+    lead = nd - base_rank
+    spec = [None] * nd
+
+    def set_if(axis_from_end, dim_size):
+        if _div(dim_size, msize):
+            spec[nd - axis_from_end] = "model"
+
+    if name in _VOCAB:
+        set_if(2, leaf.shape[lead])                   # vocab rows
+    elif name in _EXPERT and base_rank == 3:
+        if _div(leaf.shape[lead], msize):
+            set_if(3, leaf.shape[lead])               # expert-parallel
+            if expert_2d:
+                if name in ("wg", "wu") and _div(leaf.shape[-1], dsize):
+                    spec[nd - 1] = "data"             # (E, d, m): m/data
+                elif name == "wd" and _div(leaf.shape[-2], dsize):
+                    spec[nd - 2] = "data"             # (E, m, d): m/data
+        elif name in ("wg", "wu"):
+            set_if(1, leaf.shape[-1])                 # few experts: TP on ffn
+        else:                                         # wd: (E, m, d) row-par
+            set_if(2, leaf.shape[-2])
+    elif name in _CONV:
+        set_if(1, leaf.shape[-1])
+    elif name in _ROW:
+        set_if(2, leaf.shape[-2])
+    elif name in _COL:
+        set_if(1, leaf.shape[-1])
+    return P(*spec)
+
+
+def param_specs(params, mesh, *, expert_2d: bool = False):
+    """Matching pytree of PartitionSpecs for a parameter pytree (works on
+    concrete arrays or ShapeDtypeStructs)."""
+    def walk(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        return param_spec(names or ["?"], leaf, mesh, expert_2d=expert_2d)
+
+    return jax.tree_util.tree_map_with_path(walk, params)
+
+
+def zero1_specs(pspecs, params, mesh):
+    """Optimizer-moment / FSDP specs: parameter spec + shard the largest
+    still-unsharded divisible dim over ALL data-parallel axes (ZeRO-1;
+    on the multi-pod mesh that is ("pod", "data") = 32-way — required for
+    DeepSeek-V3's 5.4 TB of params+grads+moments)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dsize = 1
+    for a in dp:
+        dsize *= mesh.shape[a]
+    dp_entry = dp if len(dp) > 1 else dp[0]
+
+    def one(spec, leaf):
+        dims = list(spec)
+        for d in dims:
+            existing = d if isinstance(d, tuple) else (d,)
+            if any(a in existing for a in dp):
+                return P(*dims)     # already dp-sharded (idempotent)
+        best, best_size = None, 0
+        for i, (s, n) in enumerate(zip(dims, leaf.shape)):
+            if s is None and _div(n, dsize) and n > best_size:
+                best, best_size = i, n
+        if best is not None:
+            dims[best] = dp_entry
+        return P(*dims)
+
+    return jax.tree_util.tree_map(one, pspecs, params)
+
+
+def opt_state_specs(pspecs, params, mesh, *, zero1=True):
+    m = zero1_specs(pspecs, params, mesh) if zero1 else pspecs
+    return {"step": P(), "m": m, "v": m}
+
+
+def batch_spec(mesh, batch_size: int) -> P:
+    dp = [a for a in ("pod", "data") if a in mesh.axis_names]
+    total = int(np.prod([mesh.shape[a] for a in dp]))
+    if _div(batch_size, total):
+        return P(tuple(dp))
+    return P()                                        # tiny batch: replicate
+
+
+def cache_specs(cfg: ModelConfig, cache, mesh, batch_size: int):
+    """Specs for a decode cache pytree: batch over DP when divisible,
+    heads over model when divisible; for batch=1 long-context cells the
+    cache LENGTH axis shards over DP instead (sequence-parallel decode)."""
+    bspec = batch_spec(mesh, batch_size)
+    dp = bspec[0] if len(bspec) else None
+    msize = mesh.shape["model"]
+    dp_total = int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                            if a in mesh.axis_names]))
+
+    def one(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else "?"
+        nd = leaf.ndim
+        if name == "index":
+            return P()
+        spec = [None] * nd
+        # layouts (leading L = layer stack):
+        #   k/v/attn_k/attn_v: (L, B, H, W, dh)
+        #   ckv/kr:            (L, B, W, r)
+        #   conv:              (L, B, K-1, C)   state: (L, B, H, P, N)
+        #   cross_k/v:         (L, B, H, Se, dh)
+        bdim = 1 if nd >= 2 else None
+        if bdim is not None and dp is not None and _div(leaf.shape[bdim], dp_total):
+            spec[bdim] = dp
+        if name in ("k", "v", "attn_k", "attn_v", "cross_k", "cross_v"):
+            if _div(leaf.shape[2], msize):
+                spec[2] = "model"
+            elif _div(leaf.shape[3], msize):
+                # few KV heads (starcoder2 kv=4, chatglm kv=2): shard the
+                # cache LENGTH over "model" instead — attention reduces
+                # over it with a psum (sequence-parallel KV)
+                spec[3] = "model"
+            if spec[bdim] is None and dp is not None \
+                    and spec[3] is None and _div(leaf.shape[3], dp_total):
+                spec[3] = dp                     # sequence-parallel cache
+        elif name in ("ckv", "kr"):
+            # MLA latent is shared across heads; shard the latent rank
+            # over "model" (512/16=32) — scores psum over the rank
+            if _div(leaf.shape[3], msize):
+                spec[3] = "model"
+            if spec[bdim] is None and dp is not None \
+                    and _div(leaf.shape[2], dp_total):
+                spec[2] = dp
+        elif name == "state":
+            if _div(leaf.shape[2], msize):
+                spec[2] = "model"
+        elif name == "conv":
+            if _div(leaf.shape[3], msize):
+                spec[3] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,121 @@
+"""Input specs + step builders for every (arch x input-shape) cell.
+
+``input_specs(cfg, shape)`` returns weak-type-correct ShapeDtypeStruct
+stand-ins for every model input — shardable, no device allocation — and
+``build_step`` returns the function the dry-run lowers:
+
+  train_4k    -> train_step(params, opt_state, batch)      (fwd+bwd+AdamW)
+  prefill_32k -> prefill_step(params, batch) -> logits
+  decode_32k  -> decode_step(params, cache, tokens)        (1 new token)
+  long_500k   -> decode_step, sub-quadratic caches only
+
+Modality frontends are stubs per the assignment: [audio]/[vlm] cells get
+precomputed frame/patch embeddings in their batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm, serve
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq: int
+    global_batch: int
+    mode: str                     # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+ENC_LEN_DECODE = 4096             # encdec decode: fixed encoder stub length
+
+
+def cell_applicable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    """(runnable, reason). long_500k needs sub-quadratic attention."""
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full quadratic attention: 500k decode cache "
+                       "infeasible by design (DESIGN.md §4)")
+    return True, ""
+
+
+def _f(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    """Batch ShapeDtypeStructs for the cell (decode: the `tokens` input;
+    the cache comes from cache_specs_struct)."""
+    cell = SHAPES[shape]
+    b, s = cell.global_batch, cell.seq
+    tok = jnp.int32
+    emb = jnp.dtype(cfg.dtype)
+
+    if cell.mode in ("train", "prefill"):
+        batch = {}
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = _f((b, cfg.n_patches, cfg.d_model), emb)
+            batch["tokens"] = _f((b, s - cfg.n_patches), tok)
+            batch["labels"] = _f((b, s - cfg.n_patches), tok)
+        elif cfg.family == "encdec":
+            batch["src_embeds"] = _f((b, s, cfg.d_model), emb)
+            batch["tokens"] = _f((b, s), tok)
+            batch["labels"] = _f((b, s), tok)
+        else:
+            batch["tokens"] = _f((b, s), tok)
+            batch["labels"] = _f((b, s), tok)
+        if cell.mode == "prefill":
+            batch.pop("labels")
+        return batch
+    # decode: one new token
+    return {"tokens": _f((b, 1), tok)}
+
+
+def cache_struct(cfg: ModelConfig, shape: str):
+    """ShapeDtypeStruct pytree of the decode cache for this cell."""
+    cell = SHAPES[shape]
+    enc = ENC_LEN_DECODE if cfg.family == "encdec" else None
+    return jax.eval_shape(
+        partial(serve.init_cache, cfg, cell.global_batch, cell.seq,
+                enc_len=enc))
+
+
+def params_struct(cfg: ModelConfig):
+    return jax.eval_shape(partial(lm.init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def opt_struct(cfg: ModelConfig, pstruct, opt_dtype):
+    from repro.optim import adamw_init
+    return jax.eval_shape(partial(adamw_init, dtype=opt_dtype), pstruct)
+
+
+def build_step(cfg: ModelConfig, mode: str, *, n_micro: int = 1,
+               opt_dtype=jnp.float32, accum_dtype=jnp.float32):
+    """The function the dry-run lowers (pure, jit-ready)."""
+    if mode == "train":
+        from repro.train import make_train_step
+        return make_train_step(cfg, n_micro=n_micro, accum_dtype=accum_dtype)
+    if mode == "prefill":
+        def prefill_step(params, batch):
+            logits, _ = lm.forward(cfg, params, batch["tokens"],
+                                   patch_embeds=batch.get("patch_embeds"),
+                                   src_embeds=batch.get("src_embeds"))
+            return logits
+        return prefill_step
+    if mode == "decode":
+        def dstep(params, cache, batch):
+            return serve.decode_step(cfg, params, cache, batch["tokens"])
+        return dstep
+    raise ValueError(mode)

@@ -1,0 +1,103 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --smoke --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Wires every substrate together: config -> init (or auto-resume from the
+latest committed checkpoint) -> sharded train loop with straggler
+monitoring -> async checkpoints -> final eval. On CPU it runs the smoke
+config; on a pod slice the same driver takes --mesh data,model sizes.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import TokenPipeline
+from repro.launch import sharding as SH
+from repro.launch.mesh import make_host_mesh
+from repro.models import lm
+from repro.models.layers import set_sharding_rules
+from repro.optim import adamw_init
+from repro.train import StragglerMonitor, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    mesh = make_host_mesh(model=args.model_parallel)
+    set_sharding_rules(SH.logical_rules(mesh), mesh)
+
+    params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt = adamw_init(params)
+    start_step = 0
+    mgr = None
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir, keep=3)
+        restored = mgr.restore()
+        if restored is not None:
+            start_step, tree, _ = restored
+            params = jax.tree_util.tree_map(
+                lambda a, b: jnp.asarray(b, a.dtype), params, tree["params"])
+            opt = jax.tree_util.tree_map(
+                lambda a, b: jnp.asarray(b, a.dtype), opt, tree["opt"])
+            print(f"resumed from step {start_step}")
+
+    pspecs = SH.param_specs(params, mesh)
+    step_fn = jax.jit(
+        make_train_step(cfg, lr=args.lr, total_steps=args.steps,
+                        n_micro=args.n_micro),
+        in_shardings=(SH.named(mesh, pspecs), None, None),
+        donate_argnums=(0, 1))
+
+    pipe = TokenPipeline(args.seed, args.batch, args.seq, cfg.vocab,
+                         step=start_step)
+    mon = StragglerMonitor()
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        mon.start()
+        batch = pipe.next()
+        params, opt, metrics = step_fn(params, opt, batch)
+        action = mon.stop(step)
+        if action in ("checkpoint", "rebalance") and mgr:
+            mgr.save(step, {"params": params, "opt": opt})
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"lr={float(metrics['lr']):.2e}")
+        if mgr and step and step % args.ckpt_every == 0:
+            mgr.save(step, {"params": params, "opt": opt})
+    if mgr:
+        mgr.save(args.steps, {"params": params, "opt": opt})
+        mgr.wait()
+    dt = time.time() - t0
+    tokens = (args.steps - start_step) * args.batch * args.seq
+    print(f"done: {dt:.1f}s, {tokens/max(dt,1e-9):.0f} tok/s, "
+          f"straggler summary: {mon.summary()}")
+    set_sharding_rules(None)
+    return float(metrics["loss"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""LM substrate: model families for the assigned architecture matrix."""
+from .config import ModelConfig
+from . import attention, layers, lm, mamba2, moe, serve
+
+__all__ = ["ModelConfig", "attention", "layers", "lm", "mamba2", "moe",
+           "serve"]

@@ -1,0 +1,284 @@
+"""Attention: GQA / SWA / MLA, with training (full-sequence), prefill and
+single-token decode paths.
+
+Two implementations (cfg.attn_impl):
+  * "xla"   — query-chunked einsum attention (scan over query blocks, so
+              the (S, S) score matrix never materializes past one chunk).
+              Used for CPU smoke tests and the dry-run lowering.
+  * "flash" — the Pallas kernel (repro.kernels.flash_attention), the TPU
+              target path; causal block-skip halves issued FLOPs.
+
+MLA (DeepSeek): queries/keys split into nope+rope parts; KV compressed to
+a latent c_kv (kv_lora_rank) plus a shared rope key. The decode path
+caches ONLY (c_kv, k_rope) — the memory win that makes 32k decode cheap —
+and absorbs W_UK / W_UV into the query/output projections.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_rope, dense_init, shard
+
+_CHUNK_Q = 1024
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def init_attn(cfg: ModelConfig, key, dtype):
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    if cfg.mla:
+        ks = jax.random.split(key, 7)
+        qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+        return {
+            "w_dq": dense_init(ks[0], d, cfg.q_lora_rank, dtype),
+            "w_uq": dense_init(ks[1], cfg.q_lora_rank, h * qk, dtype),
+            "w_dkv": dense_init(ks[2], d, cfg.kv_lora_rank, dtype),
+            "w_kr": dense_init(ks[3], d, cfg.qk_rope_dim, dtype),
+            "w_uk": dense_init(ks[4], cfg.kv_lora_rank, h * cfg.qk_nope_dim, dtype),
+            "w_uv": dense_init(ks[5], cfg.kv_lora_rank, h * cfg.v_head_dim, dtype),
+            "wo": dense_init(ks[6], h * cfg.v_head_dim, d, dtype),
+        }
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, h * dh, dtype),
+        "wk": dense_init(ks[1], d, hkv * dh, dtype),
+        "wv": dense_init(ks[2], d, hkv * dh, dtype),
+        "wo": dense_init(ks[3], h * dh, d, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# core attention math (q: (B, H, Sq, dh); k/v: (B, Hkv, Skv, dh))
+# ---------------------------------------------------------------------------
+
+def _xla_attention(q, k, v, *, causal, window, q_offset, scale,
+                   chunk=_CHUNK_Q):
+    """Query-chunked attention; masks computed per chunk. q_offset is the
+    absolute position of q[0] (right-aligned decode/prefill continuation)."""
+    b, h, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = h // hkv
+    kr = jnp.repeat(k, g, axis=1) if g > 1 else k
+    vr = jnp.repeat(v, g, axis=1) if g > 1 else v
+    kpos = jnp.arange(skv)
+
+    chunk = min(chunk, sq)
+    pad = (-sq) % chunk
+    if pad:
+        q = jnp.concatenate(
+            [q, jnp.zeros((b, h, pad, dh), q.dtype)], axis=2)
+    nq = q.shape[2] // chunk
+    qc = jnp.moveaxis(q.reshape(b, h, nq, chunk, dh), 2, 0)  # (nq,b,h,c,dh)
+
+    def one(carry, args):
+        i, qi = args
+        qpos = q_offset + i * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qi.astype(jnp.float32),
+                       kr.astype(jnp.float32)) * scale
+        mask = jnp.ones((chunk, skv), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        # softmax math in fp32 (stability), but the MATERIALIZED
+        # probability panel streams at the MODEL dtype (bf16 in
+        # production) — the PV matmul's operand bytes halve and the MXU
+        # takes bf16 natively (§Perf iteration 1)
+        p = jax.nn.softmax(s, axis=-1).astype(qi.dtype)
+        o = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(qi.dtype),
+                       preferred_element_type=jnp.float32)
+        return carry, o.astype(qi.dtype)
+
+    _, out = jax.lax.scan(one, None, (jnp.arange(nq), qc))
+    dv = v.shape[-1]                       # may differ from dh (MLA)
+    out = jnp.moveaxis(out, 0, 2).reshape(b, h, nq * chunk, dv)
+    return out[:, :, :sq]
+
+
+def _flash(q, k, v, *, causal, window, scale):
+    from repro.kernels.ops import flash_attention
+    del scale  # kernel uses 1/sqrt(dh)
+    return flash_attention(q, k, v, causal=causal,
+                           window=window if window else None)
+
+
+def attention_core(cfg: ModelConfig, q, k, v, *, causal=True, q_offset=0,
+                   scale=None):
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    if cfg.attn_impl == "flash" and q.shape[2] > 1:
+        return _flash(q, k, v, causal=causal, window=cfg.window, scale=scale)
+    return _xla_attention(q, k, v, causal=causal, window=cfg.window,
+                          q_offset=q_offset, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# GQA full-sequence / prefill forward
+# ---------------------------------------------------------------------------
+
+def _split_heads(x, n, dh):
+    b, s, _ = x.shape
+    return jnp.moveaxis(x.reshape(b, s, n, dh), 2, 1)        # (B, n, S, dh)
+
+
+def _merge_heads(x):
+    b, n, s, dh = x.shape
+    return jnp.moveaxis(x, 1, 2).reshape(b, s, n * dh)
+
+
+def gqa_forward(cfg: ModelConfig, p, x, positions, *, causal=True):
+    """x: (B, S, d) -> (B, S, d). Returns (out, (k, v)) so prefill can seed
+    the cache."""
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    q = _split_heads(x @ p["wq"], h, dh)
+    k = _split_heads(x @ p["wk"], hkv, dh)
+    v = _split_heads(x @ p["wv"], hkv, dh)
+    q = shard(q, "batch", "heads", None, None)
+    k = shard(k, "batch", "kv_heads", None, None)
+    v = shard(v, "batch", "kv_heads", None, None)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rotary_pct)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rotary_pct)
+    o = attention_core(cfg, q, k, v, causal=causal)
+    o = shard(o, "batch", "heads", None, None)
+    return _merge_heads(o) @ p["wo"], (k, v)
+
+
+def gqa_decode(cfg: ModelConfig, p, x, cache_k, cache_v, index):
+    """One-token decode with a RING KV cache.
+
+    x: (B, 1, d); cache_k/v: (B, Hkv, W, dh) where W may be smaller than
+    the context (sliding-window archs keep W = window). The new entry is
+    written at slot ``index % W``; slot s currently holds the token at
+    absolute position ``index - ((index - s) mod W)`` (negative -> empty),
+    which yields both the validity and the window mask. Keys carry RoPE at
+    their absolute positions, so relative phases survive the wraparound.
+    Returns (out, k_cache', v_cache')."""
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    q = _split_heads(x @ p["wq"], h, dh)
+    k = _split_heads(x @ p["wk"], hkv, dh)
+    v = _split_heads(x @ p["wv"], hkv, dh)
+    pos = jnp.array([0]) + index
+    q = apply_rope(q, pos, cfg.rope_theta, cfg.rotary_pct)
+    k = apply_rope(k, pos, cfg.rope_theta, cfg.rotary_pct)
+    w = cache_k.shape[2]
+    slot = index % w
+    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype),
+                                             slot, axis=2)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype),
+                                             slot, axis=2)
+    g = h // hkv
+    kr = jnp.repeat(ck, g, axis=1) if g > 1 else ck
+    vr = jnp.repeat(cv, g, axis=1) if g > 1 else cv
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * (dh ** -0.5)
+    slots = jnp.arange(w)
+    kpos = index - jnp.mod(index - slots, w)                 # absolute pos
+    mask = kpos >= 0
+    if cfg.window:
+        mask &= kpos > index - cfg.window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    o = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(s, -1),
+                   vr.astype(jnp.float32)).astype(x.dtype)
+    return _merge_heads(o) @ p["wo"], ck, cv
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+def mla_forward(cfg: ModelConfig, p, x, positions, *, causal=True):
+    """Full-sequence MLA. Returns (out, (c_kv, k_rope)) for cache seeding."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+
+    q_lat = x @ p["w_dq"]                                    # (B,S,rq)
+    q = (q_lat @ p["w_uq"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(jnp.moveaxis(q_rope, 2, 1), positions, cfg.rope_theta)
+
+    c_kv = x @ p["w_dkv"]                                    # (B,S,rkv)
+    c_kv = shard(c_kv, "batch", None, None)
+    k_rope = apply_rope(x @ p["w_kr"], positions, cfg.rope_theta)  # (B,S,dr)
+    k_nope = (c_kv @ p["w_uk"]).reshape(b, s, h, dn)
+    v = (c_kv @ p["w_uv"]).reshape(b, s, h, dv)
+
+    qq = jnp.concatenate([jnp.moveaxis(q_nope, 2, 1), q_rope], axis=-1)
+    kk = jnp.concatenate([jnp.moveaxis(k_nope, 2, 1),
+                          jnp.broadcast_to(k_rope[:, None], (b, h, s, dr))],
+                         axis=-1)
+    vv = jnp.moveaxis(v, 2, 1)
+    qq = shard(qq, "batch", "heads", None, None)
+    kk = shard(kk, "batch", "heads", None, None)
+    scale = (dn + dr) ** -0.5
+    o = attention_core(cfg, qq, kk, vv, causal=causal, scale=scale)
+    return _merge_heads(o) @ p["wo"], (c_kv, k_rope)
+
+
+def mla_decode(cfg: ModelConfig, p, x, cache_ckv, cache_kr, index):
+    """Latent-space decode: scores computed against the compressed cache
+    (W_UK absorbed into q, W_UV into the output) — O(S * (rkv + dr)) per
+    head instead of O(S * (dn + dv))."""
+    b, _, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    rkv = cfg.kv_lora_rank
+
+    q_lat = x @ p["w_dq"]
+    q = (q_lat @ p["w_uq"]).reshape(b, 1, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    pos = jnp.array([0]) + index
+    q_rope = apply_rope(jnp.moveaxis(q_rope, 2, 1), pos, cfg.rope_theta)
+
+    c_new = x @ p["w_dkv"]                                   # (B,1,rkv)
+    kr_new = apply_rope(x @ p["w_kr"], pos, cfg.rope_theta)  # (B,1,dr)
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, c_new.astype(cache_ckv.dtype), index, axis=1)
+    ckr = jax.lax.dynamic_update_slice_in_dim(
+        cache_kr, kr_new.astype(cache_kr.dtype), index, axis=1)
+
+    # absorb W_UK: q_lat_h = q_nope @ W_UK_h^T -> (B, h, rkv)
+    w_uk = p["w_uk"].reshape(rkv, h, dn)
+    q_abs = jnp.einsum("bhd,khd->bhk", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))             # (B,h,rkv)
+    s_lat = jnp.einsum("bhk,bsk->bhs", q_abs,
+                       ckv.astype(jnp.float32))              # (B,h,S)
+    s_rope = jnp.einsum("bhd,bsd->bhs", q_rope[:, :, 0].astype(jnp.float32),
+                        ckr.astype(jnp.float32))
+    s = (s_lat + s_rope) * ((dn + dr) ** -0.5)
+    s_max = ckv.shape[1]
+    mask = jnp.arange(s_max) <= index
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    pattn = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsk->bhk", pattn, ckv.astype(jnp.float32))  # latent ctx
+    w_uv = p["w_uv"].reshape(rkv, h, dv)
+    o = jnp.einsum("bhk,khd->bhd", ctx, w_uv.astype(jnp.float32))
+    o = o.reshape(b, 1, h * dv).astype(x.dtype)
+    return o @ p["wo"], ckv, ckr
+
+
+# ---------------------------------------------------------------------------
+# cross attention (enc-dec)
+# ---------------------------------------------------------------------------
+
+def init_cross_attn(cfg: ModelConfig, key, dtype):
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.dh
+    ks = jax.random.split(key, 4)
+    return {"wq": dense_init(ks[0], d, h * dh, dtype),
+            "wk": dense_init(ks[1], d, h * dh, dtype),
+            "wv": dense_init(ks[2], d, h * dh, dtype),
+            "wo": dense_init(ks[3], h * dh, d, dtype)}
+
+
+def cross_attn_forward(cfg: ModelConfig, p, x, enc_out):
+    h, dh = cfg.n_heads, cfg.dh
+    q = _split_heads(x @ p["wq"], h, dh)
+    k = _split_heads(enc_out @ p["wk"], h, dh)
+    v = _split_heads(enc_out @ p["wv"], h, dh)
+    o = attention_core(cfg, q, k, v, causal=False)
+    return _merge_heads(o) @ p["wo"]

@@ -1,0 +1,200 @@
+"""Shared neural layers: norms, RoPE, MLPs, embeddings — pure functions
+over plain-dict parameter pytrees (no framework dependency).
+
+Sharding: activations/params are annotated with LOGICAL axis names via
+``shard(x, *names)``; :mod:`repro.launch.sharding` installs the logical ->
+mesh-axis rules. Outside a rules context the annotations are no-ops, so
+the same model code runs in smoke tests (1 device) and on the production
+mesh.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# logical-axis sharding
+# ---------------------------------------------------------------------------
+
+_RULES: dict[str, object] | None = None
+_MESH = None
+
+
+def set_sharding_rules(rules: dict[str, object] | None, mesh=None):
+    """Install logical->mesh axis rules (None disables annotations)."""
+    global _RULES, _MESH
+    _RULES = rules
+    _MESH = mesh
+
+
+def logical_spec(*names) -> P:
+    """PartitionSpec for logical axis names under the installed rules."""
+    if _RULES is None:
+        return P(*([None] * len(names)))
+    return P(*[_RULES.get(n) if n is not None else None for n in names])
+
+
+def shard(x, *names):
+    """with_sharding_constraint under the installed logical rules."""
+    if _RULES is None:
+        return x
+    spec = logical_spec(*names)
+    if _MESH is not None:
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(_MESH, spec))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def trunc_normal(key, shape, scale, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    if scale is None:
+        scale = d_in ** -0.5
+    return trunc_normal(key, (d_in, d_out), scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms (params in fp32 for stability; compute in fp32)
+# ---------------------------------------------------------------------------
+
+def init_norm(d, kind="rmsnorm"):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rmsnorm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def _rmsnorm_fwd(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    out = (xf * rstd * scale).astype(x.dtype)
+    # residuals: x in ITS dtype + the tiny f32 rstd. The default-traced
+    # vjp keeps several full f32 panels alive per norm; this is the
+    # fused-rmsnorm backward with bf16 cotangents (§Perf iteration 5).
+    return out, (x, rstd, scale)
+
+
+def _rmsnorm_bwd(eps, res, g):
+    x, rstd, scale = res
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    xhat = xf * rstd
+    gs = gf * scale
+    dot = jnp.mean(gs * xhat, axis=-1, keepdims=True)
+    dx = ((gs - xhat * dot) * rstd).astype(x.dtype)   # bf16 cotangent out
+    dscale = jnp.sum(gf * xhat,
+                     axis=tuple(range(x.ndim - 1))).astype(scale.dtype)
+    return dx, dscale
+
+
+_rmsnorm.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def apply_norm(p, x, kind="rmsnorm", eps=1e-6):
+    if kind == "rmsnorm":
+        return _rmsnorm(x, p["scale"], eps)
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dh_rot: int, theta: float):
+    """(dh_rot // 2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, dh_rot, 2, dtype=jnp.float32) / dh_rot))
+
+
+def apply_rope(x, positions, theta: float, rotary_pct: float = 1.0):
+    """x: (..., S, dh); positions: (S,) or broadcastable. Rotates the first
+    rotary_pct fraction of dh (chatglm-style partial/'2d' rope at 0.5)."""
+    dh = x.shape[-1]
+    dh_rot = int(dh * rotary_pct)
+    dh_rot -= dh_rot % 2
+    if dh_rot == 0:
+        return x
+    inv = rope_freqs(dh_rot, theta)
+    ang = positions[..., :, None].astype(jnp.float32) * inv      # (S, dh_rot/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    xr = x[..., :dh_rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    rot = jnp.stack([r1, r2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([rot, x[..., dh_rot:]], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d, d_ff, kind, dtype):
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {"wg": dense_init(ks[0], d, d_ff, dtype),
+                "wu": dense_init(ks[1], d, d_ff, dtype),
+                "wd": dense_init(ks[2], d_ff, d, dtype, scale=d_ff ** -0.5)}
+    return {"wu": dense_init(ks[0], d, d_ff, dtype),
+            "wd": dense_init(ks[1], d_ff, d, dtype, scale=d_ff ** -0.5)}
+
+
+def apply_mlp(p, x, kind):
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+    else:
+        h = jax.nn.gelu(x @ p["wu"])
+    if h.ndim == 3:
+        h = shard(h, "batch", None, "ffn")
+    else:                              # (tokens, ffn) 2D path (MoE shared)
+        h = shard(h, "batch", "ffn")
+    return h @ p["wd"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings / logits
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab, d, dtype):
+    return {"table": trunc_normal(key, (vocab, d), 1.0, dtype)}
+
+
+def embed_tokens(p, tokens):
+    return shard(p["table"], "vocab", None)[tokens]
+
+
+def logits_out(p, x):
+    """Vocab-parallel logits: (B, S, d) @ (d, V) -> shard over vocab."""
+    out = x @ p["table"].T.astype(x.dtype)
+    return shard(out, "batch", None, "vocab")
+
+
+def cross_entropy(logits, labels, ignore_id: int = -100):
+    """Mean token cross-entropy in fp32; labels == ignore_id masked out."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None].clip(0), axis=-1)[..., 0]
+    mask = labels != ignore_id
+    nll = (lse - ll) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)

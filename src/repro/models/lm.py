@@ -1,0 +1,297 @@
+"""Model assembly: init / forward / prefill / decode for every assigned
+family, as pure functions over stacked-parameter pytrees.
+
+Layers are stacked along a leading axis and applied with ``lax.scan`` so
+the HLO stays flat for 61-layer models (DESIGN.md §5); per-layer
+activation checkpointing (``jax.checkpoint``) is controlled by
+``cfg.remat``.
+
+Families:
+  dense    — [tinyllama, phi3, starcoder2, chatglm3] pre-norm GQA + MLP
+  moe      — [mixtral] GQA(+SWA) + top-k MoE
+  mla_moe  — [deepseek-v3] MLA + (3 dense, rest MoE) + optional MTP head
+  ssm      — [mamba2] SSD layers, attention-free
+  hybrid   — [zamba2] mamba backbone + SHARED attn+MLP block every k layers
+  encdec   — [seamless] encoder (stub audio embeds) + causal decoder w/ xattn
+  vlm      — [llava-next] patch-embed stub prepended to token embeds
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import mamba2 as M2
+from . import moe as MOE
+from .config import ModelConfig
+from .layers import (apply_mlp, apply_norm, cross_entropy, dense_init,
+                     embed_tokens, init_embed, init_mlp, init_norm,
+                     logits_out, shard)
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _stack_init(init_fn, key, n):
+    """vmap an init function over layer keys -> stacked params."""
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def init_dense_block(cfg: ModelConfig, key):
+    dt = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    return {"ln1": init_norm(cfg.d_model, cfg.norm),
+            "attn": A.init_attn(cfg, k1, dt),
+            "ln2": init_norm(cfg.d_model, cfg.norm),
+            "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp, dt)}
+
+
+def init_moe_block(cfg: ModelConfig, key):
+    dt = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    return {"ln1": init_norm(cfg.d_model, cfg.norm),
+            "attn": A.init_attn(cfg, k1, dt),
+            "ln2": init_norm(cfg.d_model, cfg.norm),
+            "moe": MOE.init_moe(cfg, k2, dt)}
+
+
+def apply_block(cfg: ModelConfig, p, x, positions, *, causal=True):
+    """Pre-norm transformer block. Returns (x, aux)."""
+    attn_fn = A.mla_forward if cfg.mla else A.gqa_forward
+    h, _ = attn_fn(cfg, p["attn"], apply_norm(p["ln1"], x, cfg.norm),
+                   positions, causal=causal)
+    x = x + h
+    x = shard(x, "batch", None, None)
+    hn = apply_norm(p["ln2"], x, cfg.norm)
+    if "moe" in p:
+        h2, aux = MOE.moe_forward(cfg, p["moe"], hn)
+    else:
+        h2, aux = apply_mlp(p["mlp"], hn, cfg.mlp), jnp.float32(0.0)
+    x = x + h2
+    return shard(x, "batch", None, None), aux
+
+
+def init_mamba_block(cfg: ModelConfig, key):
+    return {"ln": init_norm(cfg.d_model, cfg.norm),
+            "mamba": M2.init_mamba(cfg, key, _dtype(cfg))}
+
+
+def apply_mamba_block(cfg: ModelConfig, p, x):
+    h = M2.mamba_forward(cfg, p["mamba"], apply_norm(p["ln"], x, cfg.norm))
+    return shard(x + h, "batch", None, None)
+
+
+def init_xattn_block(cfg: ModelConfig, key):
+    dt = _dtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": init_norm(cfg.d_model, cfg.norm),
+            "attn": A.init_attn(cfg, k1, dt),
+            "lnx": init_norm(cfg.d_model, cfg.norm),
+            "xattn": A.init_cross_attn(cfg, k2, dt),
+            "ln2": init_norm(cfg.d_model, cfg.norm),
+            "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.mlp, dt)}
+
+
+def apply_xattn_block(cfg: ModelConfig, p, x, positions, enc_out):
+    h, _ = A.gqa_forward(cfg, p["attn"], apply_norm(p["ln1"], x, cfg.norm),
+                         positions, causal=True)
+    x = x + h
+    x = x + A.cross_attn_forward(cfg, p["xattn"],
+                                 apply_norm(p["lnx"], x, cfg.norm), enc_out)
+    x = x + apply_mlp(p["mlp"], apply_norm(p["ln2"], x, cfg.norm), cfg.mlp)
+    return shard(x, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key):
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, 8)
+    p = {"embed": init_embed(keys[0], cfg.vocab, cfg.d_model, dt),
+         "final_norm": init_norm(cfg.d_model, cfg.norm)}
+
+    if cfg.family in ("dense", "moe", "mla_moe", "vlm"):
+        block_init = (init_moe_block if cfg.is_moe else init_dense_block)
+        n_moe = cfg.n_layers - cfg.first_k_dense
+        if cfg.first_k_dense:
+            p["dense_layers"] = _stack_init(
+                lambda k: init_dense_block(cfg, k), keys[1], cfg.first_k_dense)
+        p["layers"] = _stack_init(
+            lambda k: block_init(cfg, k), keys[2], n_moe)
+        if cfg.family == "vlm":
+            p["patch_proj"] = dense_init(keys[3], cfg.d_model, cfg.d_model, dt)
+        if cfg.mtp_depth:
+            p["mtp"] = {"block": init_dense_block(
+                            dataclass_replace(cfg, n_experts=0), keys[4]),
+                        "norm": init_norm(cfg.d_model, cfg.norm),
+                        "proj": dense_init(keys[5], 2 * cfg.d_model,
+                                           cfg.d_model, dt)}
+    elif cfg.family == "ssm":
+        p["layers"] = _stack_init(
+            lambda k: init_mamba_block(cfg, k), keys[1], cfg.n_layers)
+    elif cfg.family == "hybrid":
+        p["layers"] = _stack_init(
+            lambda k: init_mamba_block(cfg, k), keys[1], cfg.n_layers)
+        p["shared_attn"] = init_dense_block(cfg, keys[2])
+    elif cfg.family == "encdec":
+        p["enc_layers"] = _stack_init(
+            lambda k: init_dense_block(cfg, k), keys[1], cfg.n_enc_layers)
+        p["enc_norm"] = init_norm(cfg.d_model, cfg.norm)
+        p["layers"] = _stack_init(
+            lambda k: init_xattn_block(cfg, k), keys[2], cfg.n_layers)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+def dataclass_replace(cfg, **kw):
+    import dataclasses
+    return dataclasses.replace(cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _scan_blocks(cfg, stacked, x, positions, *, causal=True, remat=None):
+    remat = cfg.remat if remat is None else remat
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = apply_block(cfg, lp, x, positions, causal=causal)
+        return (x, aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), stacked)
+    return x, aux
+
+
+def _scan_mamba(cfg, stacked, x, remat=None):
+    remat = cfg.remat if remat is None else remat
+
+    def body(x, lp):
+        return apply_mamba_block(cfg, lp, x), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, stacked)
+    return x
+
+
+def forward(cfg: ModelConfig, params, tokens, *, patch_embeds=None,
+            src_embeds=None):
+    """Token logits. tokens: (B, S); patch_embeds: (B, P, d) [vlm];
+    src_embeds: (B, Se, d) [encdec audio stub]. Returns (logits, aux)."""
+    x = embed_tokens(params["embed"], tokens)
+    x = shard(x, "batch", None, None)
+
+    if cfg.family == "vlm":
+        pe = patch_embeds.astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    aux = jnp.float32(0.0)
+
+    if cfg.family in ("dense", "moe", "mla_moe", "vlm"):
+        if cfg.first_k_dense:
+            cfg_dense = dataclass_replace(cfg, n_experts=0)
+            x, _ = _scan_blocks(cfg_dense, params["dense_layers"], x, positions)
+        x, aux = _scan_blocks(cfg, params["layers"], x, positions)
+    elif cfg.family == "ssm":
+        x = _scan_mamba(cfg, params["layers"], x)
+    elif cfg.family == "hybrid":
+        x = _hybrid_forward(cfg, params, x, positions)
+    elif cfg.family == "encdec":
+        enc = src_embeds.astype(x.dtype)
+        enc, _ = _scan_blocks(cfg, params["enc_layers"], enc,
+                              jnp.arange(enc.shape[1]), causal=False)
+        enc = apply_norm(params["enc_norm"], enc, cfg.norm)
+
+        def body(x, lp):
+            return apply_xattn_block(cfg, lp, x, positions, enc), None
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = logits_out(params["embed"], x)
+    if cfg.family == "vlm":
+        logits = logits[:, patch_embeds.shape[1]:]
+    return logits, aux
+
+
+def _hybrid_forward(cfg: ModelConfig, params, x, positions):
+    """Mamba backbone; the SHARED attn block is applied after every
+    cfg.attn_every layers (tied weights across applications)."""
+    k = cfg.attn_every
+    n_groups, tail = divmod(cfg.n_layers, k)
+    stacked = params["layers"]
+    grouped = jax.tree_util.tree_map(
+        lambda a: a[:n_groups * k].reshape((n_groups, k) + a.shape[1:]),
+        stacked)
+    tail_p = jax.tree_util.tree_map(lambda a: a[n_groups * k:], stacked)
+
+    # remat PER LAYER inside the group (checkpointing the whole group
+    # makes the inner scan save f32 SSD states for the group backward —
+    # 11 GiB/group at 4k seq; per-layer remat saves only bf16 layer
+    # inputs — §Perf zamba2 iteration 4)
+    def group_body(x, gp):
+        x = _scan_mamba(cfg, gp, x, remat=cfg.remat)
+        attn = apply_block
+        if cfg.remat:
+            attn = jax.checkpoint(apply_block, static_argnums=(0,))
+        x, _ = attn(cfg, params["shared_attn"], x, positions)
+        return x, None
+
+    x, _ = jax.lax.scan(group_body, x, grouped)
+    if tail:
+        x = _scan_mamba(cfg, tail_p, x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# loss (with optional deepseek MTP auxiliary)
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg: ModelConfig, params, batch, *, aux_weight=0.01,
+            mtp_weight=0.3):
+    logits, aux = forward(cfg, params, batch["tokens"],
+                          patch_embeds=batch.get("patch_embeds"),
+                          src_embeds=batch.get("src_embeds"))
+    loss = cross_entropy(logits, batch["labels"])
+    total = loss + aux_weight * aux
+    metrics = {"ce": loss, "moe_aux": aux}
+    if cfg.mtp_depth and "mtp" in params:
+        # depth-1 MTP: predict t+2 from [h_t ; emb(label_t)]
+        mtp_loss = _mtp_loss(cfg, params, batch)
+        total = total + mtp_weight * mtp_loss
+        metrics["mtp"] = mtp_loss
+    return total, metrics
+
+
+def _mtp_loss(cfg, params, batch):
+    cfg_d = dataclass_replace(cfg, n_experts=0, remat=False)
+    x = embed_tokens(params["embed"], batch["tokens"])
+    lab_emb = embed_tokens(params["embed"], jnp.maximum(batch["labels"], 0))
+    h = jnp.concatenate([x, lab_emb], axis=-1) @ params["mtp"]["proj"]
+    h, _ = apply_block(cfg_d, params["mtp"]["block"], h,
+                       jnp.arange(h.shape[1]))
+    h = apply_norm(params["mtp"]["norm"], h, cfg.norm)
+    logits = logits_out(params["embed"], h)
+    labels2 = jnp.concatenate(
+        [batch["labels"][:, 1:],
+         jnp.full_like(batch["labels"][:, :1], -100)], axis=1)
+    return cross_entropy(logits, labels2)

@@ -1,0 +1,244 @@
+"""Mamba2 / SSD layer (state-space duality, arXiv:2405.21060).
+
+Chunked SSD: the sequence is split into chunks of length ``CHUNK``; within
+a chunk the output is an attention-like masked matmul (MXU work), across
+chunks a (H, P, N) state is carried by a ``lax.scan`` — O(S) time,
+O(S * N) memory, which is what makes the 500k-token decode cell feasible.
+
+Decode is the pure recurrence: one state update per token against a
+(B, H, P, N) state cache plus a (B, conv-1, conv_dim) rolling conv cache.
+
+Tensor-parallel layout (DESIGN.md §5): the reference implementation fuses
+in_proj into one (d, 2*di+2*G*N+H) matrix; here the z / x / B / C / dt
+projections and the depthwise-conv weights are SEPARATE parameters so
+each shards cleanly on its own output axis — x/z over "model" (heads),
+B/C/dt replicated (small). Depthwise conv over a channel-sharded axis is
+elementwise in channels, so TP needs no collectives inside the layer
+until out_proj's row-parallel reduce. Math is identical to the fused
+form (a depthwise conv of a concatenation == concatenation of depthwise
+convs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init, shard
+
+CHUNK = 256
+
+
+def dims(cfg: ModelConfig):
+    di = cfg.ssm_expand * cfg.d_model
+    nh = di // cfg.ssm_headdim
+    conv_dim = di + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return di, nh, conv_dim
+
+
+def init_mamba(cfg: ModelConfig, key, dtype):
+    d = cfg.d_model
+    di, nh, _ = dims(cfg)
+    gn = cfg.ssm_ngroups * cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    return {
+        "wz": dense_init(ks[0], d, di, dtype),
+        "wx": dense_init(ks[1], d, di, dtype),
+        "wb": dense_init(ks[2], d, gn, dtype),
+        "wc": dense_init(ks[3], d, gn, dtype),
+        "wdt": dense_init(ks[4], d, nh, dtype),
+        "conv_wx": jax.random.normal(ks[5], (cfg.ssm_conv, di), dtype)
+                   * (cfg.ssm_conv ** -0.5),
+        "conv_wb": jnp.zeros((cfg.ssm_conv, gn), dtype),
+        "conv_wc": jnp.zeros((cfg.ssm_conv, gn), dtype),
+        "conv_b": jnp.zeros((di + 2 * gn,), dtype),
+        "a_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[0], di, d, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv, width K: (B, S, C) -> (B, S, C)."""
+    k = w.shape[0]
+    pad = jnp.zeros(x.shape[:1] + (k - 1,) + x.shape[2:], x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _segsum(log_a):
+    """(..., L) -> (..., L, L) lower-triangular cumulative sums:
+    out[i, j] = sum_{j < m <= i} log_a[m] (=-inf above diagonal)."""
+    L = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_forward(cfg: ModelConfig, p, u, B, C, dt):
+    """Chunked SSD scan.
+
+    u: (Bt, S, H, P) inputs; B/C: (Bt, S, G, N); dt: (Bt, S, H) softplus'd.
+    Returns y: (Bt, S, H, P).
+    """
+    bt, s, h, pdim = u.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    a = -jnp.exp(p["a_log"])                                  # (H,) negative
+    log_da = dt * a                                           # (Bt,S,H) = log dA
+
+    lc = min(cfg.ssm_chunk or CHUNK, s)
+    assert s % lc == 0, "sequence must divide the SSD chunk"
+    nc = s // lc
+
+    def resh(x):
+        return x.reshape((bt, nc, lc) + x.shape[2:])
+
+    uc, Bc, Cc, dtc, ldc = map(resh, (u, B, C, dt, log_da))
+    Bh = jnp.repeat(Bc, rep, axis=3)                          # (Bt,nc,lc,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    # intra-chunk (diagonal blocks): attention-like masked matmul.
+    # The (lc, lc) panels are the memory hot-spot; the exp/mask/multiply
+    # chain fuses into one pass whose MATERIALIZED product streams at
+    # bf16, and dt*u is folded into the small (lc, H, P) side before the
+    # second contraction (§Perf zamba2 iteration 2).
+    ss = _segsum(jnp.moveaxis(ldc, -1, -2))                   # (Bt,nc,H,lc,lc)
+    decay = jnp.exp(ss)
+    scores = jnp.einsum("bclhn,bcshn->bchls", Ch, Bh,
+                        preferred_element_type=jnp.float32)
+    panel = (scores * decay).astype(u.dtype)   # bf16 in production models
+    du = (dtc[..., None] * uc.astype(jnp.float32)).astype(u.dtype)
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", panel, du,
+                        preferred_element_type=jnp.float32)
+
+    # chunk-final states — fold the per-position scalars into B first so
+    # the contraction is ONE dot with (lc, H, N) x (lc, H, P) panels
+    # (pairwise contraction order matters: the naive 4-operand einsum
+    # materialized an (S, lc)-sized intermediate — §Perf zamba2 iter 4)
+    cum = jnp.cumsum(ldc, axis=2)                             # (Bt,nc,lc,H)
+    total = cum[:, :, -1:]                                    # (Bt,nc,1,H)
+    decay_in = jnp.exp(total - cum)                           # contribution to end
+    b_scaled = (Bh * (dtc * decay_in)[..., None]).astype(u.dtype)
+    states = jnp.einsum("bclhn,bclhp->bchpn", b_scaled, uc,
+                        preferred_element_type=jnp.float32)   # (Bt,nc,H,P,N)
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(total[:, :, 0])                     # (Bt,nc,H)
+
+    def scan_fn(carry, args):
+        st, cd = args                                         # (Bt,H,P,N),(Bt,H)
+        new = carry * cd[..., None, None] + st
+        return new, carry                                     # emit PREVIOUS
+
+    init = jnp.zeros((bt, h, pdim, n), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)             # (Bt,nc,H,P,N)
+
+    # inter-chunk contribution: contract over N first ((lc,h,p) result),
+    # THEN scale by decay — keeps every intermediate O(lc * h * p)
+    decay_out = jnp.exp(cum)                                  # (Bt,nc,lc,H)
+    y_off = jnp.einsum("bclhn,bchpn->bclhp", Ch,
+                       prev_states.astype(u.dtype),
+                       preferred_element_type=jnp.float32)
+    y_off = (y_off * decay_out[..., None]).astype(y_diag.dtype)
+
+    y = (y_diag + y_off).reshape(bt, s, h, pdim)
+    return y + u * p["d_skip"][None, None, :, None]
+
+
+def _project(cfg, p, x):
+    """x -> (z, u_conv, B_conv, C_conv, dt) with per-part causal convs."""
+    z = x @ p["wz"]
+    xu = _causal_conv(x @ p["wx"], p["conv_wx"],
+                      p["conv_b"][:p["conv_wx"].shape[1]])
+    di = p["conv_wx"].shape[1]
+    gn = p["conv_wb"].shape[1]
+    xb = _causal_conv(x @ p["wb"], p["conv_wb"], p["conv_b"][di:di + gn])
+    xc = _causal_conv(x @ p["wc"], p["conv_wc"], p["conv_b"][di + gn:])
+    dt = x @ p["wdt"]
+    return z, xu, xb, xc, dt
+
+
+def mamba_forward(cfg: ModelConfig, p, x):
+    """x: (B, S, d) -> (B, S, d)."""
+    b, s, d = x.shape
+    di, nh, _ = dims(cfg)
+    g, n, hp = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_headdim
+
+    z, xu, xb, xc, dt = _project(cfg, p, x)
+    u = xu.reshape(b, s, nh, hp)
+    Bs = xb.reshape(b, s, g, n)
+    Cs = xc.reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+
+    u = shard(u, "batch", None, "heads", None)
+    y = ssd_forward(cfg, p, u, Bs, Cs, dt)
+    y = y.reshape(b, s, di)
+
+    # gated RMSNorm (normalize y * silu(z))
+    yz = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(yz.astype(jnp.float32)), -1, keepdims=True)
+    yz = (yz * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"]).astype(x.dtype)
+    return yz @ p["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# decode (recurrent single step)
+# ---------------------------------------------------------------------------
+
+def init_mamba_cache(cfg: ModelConfig, batch, dtype=jnp.float32):
+    di, nh, conv_dim = dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, nh, cfg.ssm_headdim, cfg.ssm_state),
+                           jnp.float32),
+    }
+
+
+def mamba_decode(cfg: ModelConfig, p, x, cache):
+    """x: (B, 1, d); cache: {"conv", "state"}. Returns (out, new_cache)."""
+    b, _, d = x.shape
+    di, nh, conv_dim = dims(cfg)
+    g, n, hp = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_headdim
+    gn = g * n
+
+    x0 = x[:, 0]
+    z = x0 @ p["wz"]
+    xbc = jnp.concatenate([x0 @ p["wx"], x0 @ p["wb"], x0 @ p["wc"]], -1)
+    dt = x0 @ p["wdt"]
+    window = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)  # (B,K,C)
+    conv_w = jnp.concatenate([p["conv_wx"], p["conv_wb"], p["conv_wc"]], -1)
+    conv_out = jnp.einsum("bkc,kc->bc", window, conv_w) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:]
+
+    u = xbc[..., :di].reshape(b, nh, hp)
+    Bs = xbc[..., di:di + gn].reshape(b, g, n)
+    Cs = xbc[..., di + gn:].reshape(b, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt * a)                                      # (B, H)
+
+    rep = nh // g
+    Bh = jnp.repeat(Bs, rep, axis=1)                          # (B, H, N)
+    Ch = jnp.repeat(Cs, rep, axis=1)
+    new_state = (cache["state"] * da[..., None, None]
+                 + jnp.einsum("bh,bhp,bhn->bhpn", dt, u.astype(jnp.float32),
+                              Bh.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch.astype(jnp.float32))
+    y = y + u.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(b, di).astype(x.dtype)
+
+    yz = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(yz.astype(jnp.float32)), -1, keepdims=True)
+    yz = (yz * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"]).astype(x.dtype)
+    out = (yz @ p["out_proj"])[:, None]
+    return out, {"conv": new_conv, "state": new_state}

@@ -1,0 +1,268 @@
+"""Serving: cache init / prefill / single-token decode for every family.
+
+Cache shapes (leading L = stacked layers, scanned like forward):
+
+  dense/moe/vlm : k/v (L, B, Hkv, W, dh)  — W = min(window, max_len) ring
+  mla           : ckv (L, B, S, r_kv), kr (L, B, S, d_rope)  — latent cache
+  ssm           : conv (L, B, K-1, conv_dim), state (L, B, H, P, N)
+  hybrid        : ssm caches for all layers + ring k/v per shared-attn app
+  encdec        : decoder self k/v ring + cross k/v precomputed at prefill
+
+``decode_step`` is the unit the decode_* / long_* dry-run cells lower:
+one new token against a seq_len-deep cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import mamba2 as M2
+from . import moe as MOE
+from .config import ModelConfig
+from .layers import apply_mlp, apply_norm, embed_tokens, logits_out, shard
+from .lm import dataclass_replace
+
+# ---------------------------------------------------------------------------
+# cache init
+# ---------------------------------------------------------------------------
+
+
+def kv_width(cfg: ModelConfig, max_len: int) -> int:
+    return min(cfg.window, max_len) if cfg.window else max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               enc_len: int | None = None):
+    c = {"index": jnp.int32(0)}
+    w = kv_width(cfg, max_len)
+    if cfg.family in ("dense", "moe", "vlm"):
+        shape = (cfg.n_layers, batch, cfg.n_kv_heads, w, cfg.dh)
+        c["k"] = jnp.zeros(shape, dtype)
+        c["v"] = jnp.zeros(shape, dtype)
+    elif cfg.family == "mla_moe":
+        c["ckv"] = jnp.zeros((cfg.n_layers, batch, max_len, cfg.kv_lora_rank),
+                             dtype)
+        c["kr"] = jnp.zeros((cfg.n_layers, batch, max_len, cfg.qk_rope_dim),
+                            dtype)
+    elif cfg.family == "ssm":
+        mc = M2.init_mamba_cache(cfg, batch)
+        c.update(jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), mc))
+    elif cfg.family == "hybrid":
+        mc = M2.init_mamba_cache(cfg, batch)
+        c.update(jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), mc))
+        n_apps = cfg.n_layers // cfg.attn_every
+        shape = (n_apps, batch, cfg.n_kv_heads, w, cfg.dh)
+        c["attn_k"] = jnp.zeros(shape, dtype)
+        c["attn_v"] = jnp.zeros(shape, dtype)
+    elif cfg.family == "encdec":
+        shape = (cfg.n_layers, batch, cfg.n_heads, w, cfg.dh)
+        c["k"] = jnp.zeros(shape, dtype)
+        c["v"] = jnp.zeros(shape, dtype)
+        # cross k/v overwritten by prefill_encoder; allocated here so the
+        # cache pytree has static structure for jit/dry-run
+        el = enc_len if enc_len is not None else 1
+        xshape = (cfg.n_layers, batch, cfg.n_heads, el, cfg.dh)
+        c["cross_k"] = jnp.zeros(xshape, dtype)
+        c["cross_v"] = jnp.zeros(xshape, dtype)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    """tokens: (B, 1) -> (logits (B, 1, V), cache'). cache["index"] is the
+    number of tokens already in context."""
+    x = embed_tokens(params["embed"], tokens)
+    index = cache["index"]
+    new = dict(cache)
+
+    if cfg.family in ("dense", "moe", "vlm", "mla_moe"):
+        if cfg.family == "mla_moe" and cfg.first_k_dense:
+            # deepseek: first_k dense layers share the stacked-cache scan,
+            # so caches are stacked over ALL layers; split the param stacks
+            pass
+        x, new = _decode_attn_stack(cfg, params, x, cache, new, index)
+    elif cfg.family == "ssm":
+        def body(x, xs):
+            lp, conv, state = xs
+            xn = apply_norm(lp["ln"], x, cfg.norm)
+            h, mc = M2.mamba_decode(cfg, lp["mamba"], xn,
+                                    {"conv": conv, "state": state})
+            return x + h, (mc["conv"], mc["state"])
+
+        x, (conv, state) = jax.lax.scan(
+            body, x, (params["layers"], cache["conv"], cache["state"]))
+        new["conv"], new["state"] = conv, state
+    elif cfg.family == "hybrid":
+        x, new = _decode_hybrid(cfg, params, x, cache, new, index)
+    elif cfg.family == "encdec":
+        x, new = _decode_encdec(cfg, params, x, cache, new, index)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = logits_out(params["embed"], x)
+    new["index"] = index + 1
+    return logits, new
+
+
+def _ffn_decode(cfg, lp, x):
+    hn = apply_norm(lp["ln2"], x, cfg.norm)
+    if "moe" in lp:
+        h2, _ = MOE.moe_forward(cfg, lp["moe"], hn)
+    else:
+        h2 = apply_mlp(lp["mlp"], hn, cfg.mlp)
+    return x + h2
+
+
+def _decode_attn_stack(cfg, params, x, cache, new, index):
+    mla = cfg.family == "mla_moe"
+
+    def make_body(block_cfg):
+        def body(x, xs):
+            if mla:
+                lp, ckv, kr = xs
+                xn = apply_norm(lp["ln1"], x, block_cfg.norm)
+                h, ckv, kr = A.mla_decode(block_cfg, lp["attn"], xn, ckv, kr,
+                                          index)
+                x = _ffn_decode(block_cfg, lp, x + h)
+                return x, (ckv, kr)
+            lp, ck, cv = xs
+            xn = apply_norm(lp["ln1"], x, block_cfg.norm)
+            h, ck, cv = A.gqa_decode(block_cfg, lp["attn"], xn, ck, cv, index)
+            x = _ffn_decode(block_cfg, lp, x + h)
+            return x, (ck, cv)
+        return body
+
+    if mla:
+        caches = (cache["ckv"], cache["kr"])
+    else:
+        caches = (cache["k"], cache["v"])
+
+    if cfg.first_k_dense:
+        fk = cfg.first_k_dense
+        head = jax.tree_util.tree_map(lambda a: a[:fk], caches)
+        tail = jax.tree_util.tree_map(lambda a: a[fk:], caches)
+        cfg_d = dataclass_replace(cfg, n_experts=0)
+        x, head_new = jax.lax.scan(make_body(cfg_d), x,
+                                   (params["dense_layers"],) + head)
+        x, tail_new = jax.lax.scan(make_body(cfg), x,
+                                   (params["layers"],) + tail)
+        merged = jax.tree_util.tree_map(
+            lambda a, b: jnp.concatenate([a, b], 0), head_new, tail_new)
+    else:
+        x, merged = jax.lax.scan(make_body(cfg), x,
+                                 (params["layers"],) + caches)
+    if mla:
+        new["ckv"], new["kr"] = merged
+    else:
+        new["k"], new["v"] = merged
+    return x, new
+
+
+def _decode_hybrid(cfg, params, x, cache, new, index):
+    k = cfg.attn_every
+    n_groups, tail = divmod(cfg.n_layers, k)
+
+    def group(a, n0, n1):
+        return jax.tree_util.tree_map(lambda t: t[n0:n1], a)
+
+    def mamba_body(x, xs):
+        lp, conv, state = xs
+        xn = apply_norm(lp["ln"], x, cfg.norm)
+        h, mc = M2.mamba_decode(cfg, lp["mamba"], xn,
+                                {"conv": conv, "state": state})
+        return x + h, (mc["conv"], mc["state"])
+
+    convs, states = [], []
+    ks, vs = [], []
+    for gidx in range(n_groups):
+        sl = slice(gidx * k, (gidx + 1) * k)
+        x, (cv_, st_) = jax.lax.scan(
+            mamba_body, x,
+            (group(params["layers"], sl.start, sl.stop),
+             cache["conv"][sl], cache["state"][sl]))
+        convs.append(cv_)
+        states.append(st_)
+        lp = params["shared_attn"]
+        xn = apply_norm(lp["ln1"], x, cfg.norm)
+        h, ck, cvv = A.gqa_decode(cfg, lp["attn"], xn,
+                                  cache["attn_k"][gidx], cache["attn_v"][gidx],
+                                  index)
+        x = _ffn_decode(cfg, lp, x + h)
+        ks.append(ck)
+        vs.append(cvv)
+    if tail:
+        x, (cv_, st_) = jax.lax.scan(
+            mamba_body, x,
+            (group(params["layers"], n_groups * k, cfg.n_layers),
+             cache["conv"][n_groups * k:], cache["state"][n_groups * k:]))
+        convs.append(cv_)
+        states.append(st_)
+    new["conv"] = jnp.concatenate(convs, 0)
+    new["state"] = jnp.concatenate(states, 0)
+    new["attn_k"] = jnp.stack(ks, 0)
+    new["attn_v"] = jnp.stack(vs, 0)
+    return x, new
+
+
+def _decode_encdec(cfg, params, x, cache, new, index):
+    def body(x, xs):
+        lp, ck, cv, xk, xv = xs
+        xn = apply_norm(lp["ln1"], x, cfg.norm)
+        h, ck, cv = A.gqa_decode(cfg, lp["attn"], xn, ck, cv, index)
+        x = x + h
+        # cross attention against precomputed encoder k/v
+        xq = apply_norm(lp["lnx"], x, cfg.norm)
+        q = A._split_heads(xq @ lp["xattn"]["wq"], cfg.n_heads, cfg.dh)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                       xk.astype(jnp.float32)) * (cfg.dh ** -0.5)
+        o = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(s, -1),
+                       xv.astype(jnp.float32)).astype(x.dtype)
+        x = x + A._merge_heads(o) @ lp["xattn"]["wo"]
+        x = x + apply_mlp(lp["mlp"], apply_norm(lp["ln2"], x, cfg.norm),
+                          cfg.mlp)
+        return x, (ck, cv)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    new["k"], new["v"] = k_new, v_new
+    return x, new
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def prefill_encoder(cfg: ModelConfig, params, cache, src_embeds):
+    """encdec: run the encoder and precompute per-layer cross k/v."""
+    from .lm import _scan_blocks
+    enc, _ = _scan_blocks(cfg, params["enc_layers"], src_embeds,
+                          jnp.arange(src_embeds.shape[1]), causal=False)
+    enc = apply_norm(params["enc_norm"], enc, cfg.norm)
+
+    def one_layer(lp):
+        k = A._split_heads(enc @ lp["xattn"]["wk"], cfg.n_heads, cfg.dh)
+        v = A._split_heads(enc @ lp["xattn"]["wv"], cfg.n_heads, cfg.dh)
+        return k, v
+
+    k, v = jax.vmap(one_layer)(params["layers"])
+    cache = dict(cache)
+    cache["cross_k"], cache["cross_v"] = k, v
+    return cache
+
+
+def prefill(cfg: ModelConfig, params, cache, tokens):
+    """Sequential prefill via decode_step scan (exact; O(S) steps). For
+    high-throughput prefill the forward() path + cache scatter is the TPU
+    route; this reference path is used by tests and the serve example."""
+    def step(cache, tok):
+        logits, cache = decode_step(cfg, params, cache, tok[:, None])
+        return cache, logits[:, 0]
+
+    cache, logits = jax.lax.scan(step, cache, tokens.T)
+    return cache, jnp.moveaxis(logits, 0, 1)       # (B, S, V)

@@ -1,0 +1,7 @@
+from .adamw import adamw_init, adamw_update, cosine_schedule, clip_by_global_norm
+from .compression import (compress_int8, decompress_int8,
+                          error_feedback_compress)
+
+__all__ = ["adamw_init", "adamw_update", "cosine_schedule",
+           "clip_by_global_norm", "compress_int8", "decompress_int8",
+           "error_feedback_compress"]

@@ -1,0 +1,46 @@
+"""Int8 error-feedback gradient compression for cross-pod reduction.
+
+At 2 pods x 256 chips, the inter-pod hop is the thinnest link in the
+all-reduce; quantizing the cross-pod summand to int8 (per-tensor scale)
+cuts that traffic 4x vs bf16. The quantization error is fed back into the
+next step's gradient (error-feedback/EF-SGD), which keeps SGD convergence
+unbiased to first order.
+
+Usage inside a shard_map over the "pod" axis:
+
+    g_q, scale, err' = error_feedback_compress(g + err, ...)
+    g_sum = jax.lax.psum(g_q.astype(f32) * scale, "pod")
+
+The pure functions here are unit-tested for the EF invariant
+(quantize + error == input); the trainer wires them behind
+``--grad-compression`` (see repro/train/step.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x):
+    """Per-tensor symmetric int8 quantization. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def error_feedback_compress(g, err):
+    """EF step: quantize (g + err); the residual becomes the next err.
+
+    Returns (q, scale, new_err) with the invariant
+    decompress(q, scale) + new_err == g + err (exactly, in fp32).
+    """
+    target = g.astype(jnp.float32) + err
+    q, scale = compress_int8(target)
+    new_err = target - decompress_int8(q, scale)
+    return q, scale, new_err

@@ -1,0 +1,4 @@
+from .step import make_train_step, make_eval_step
+from .straggler import StragglerMonitor
+
+__all__ = ["make_train_step", "make_eval_step", "StragglerMonitor"]

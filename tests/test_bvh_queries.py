@@ -1,0 +1,144 @@
+"""BVH queries vs the BruteForce oracle (the paper's own exactness bar:
+both indexes must return identical result sets)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import geometry as G, predicates as P, callbacks as CB
+from repro.core.brute_force import BruteForce
+from repro.core.bvh import BVH
+
+rng = np.random.default_rng(7)
+
+
+def _points(n, dim=3, seed=0):
+    r = np.random.default_rng(seed)
+    return G.Points(jnp.asarray(r.uniform(0, 1, (n, dim)).astype(np.float32)))
+
+
+@pytest.mark.parametrize("dim", [1, 2, 3, 5, 10])
+def test_sphere_counts_match_bruteforce(dim):
+    vals = _points(300, dim, seed=dim)
+    q = _points(40, dim, seed=100 + dim)
+    preds = P.intersects(G.Spheres(q.coords, jnp.full((40,), 0.3)))
+    a = BVH(None, vals).count(None, preds)
+    b = BruteForce(None, vals).count(None, preds)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_box_query_sets_match():
+    vals = _points(400)
+    lo = jnp.asarray(rng.uniform(0, 0.8, (30, 3)).astype(np.float32))
+    preds = P.intersects(G.Boxes(lo, lo + 0.2))
+    bvh, bf = BVH(None, vals), BruteForce(None, vals)
+    _, ia, oa = bvh.query(None, preds)
+    _, ib, ob = bf.query(None, preds)
+    assert np.array_equal(np.asarray(oa), np.asarray(ob))
+    for q in range(30):
+        sa = set(np.asarray(ia[oa[q]:oa[q + 1]]).tolist())
+        sb = set(np.asarray(ib[ob[q]:ob[q + 1]]).tolist())
+        assert sa == sb
+
+
+@pytest.mark.parametrize("k", [1, 4, 17])
+def test_knn_matches_bruteforce(k):
+    vals = _points(500)
+    q = _points(64, seed=5)
+    preds = P.nearest(q, k=k)
+    da, ia = BVH(None, vals).knn(None, preds)
+    db, ib = BruteForce(None, vals).knn(None, preds)
+    assert np.allclose(np.asarray(da), np.asarray(db), atol=1e-5)
+
+
+def test_knn_against_triangles_fine_distance():
+    """§2.1.2 fine nearest: distances to the triangles, not their boxes."""
+    r = np.random.default_rng(11)
+    a = r.uniform(0, 1, (200, 3)).astype(np.float32)
+    tris = G.Triangles(jnp.asarray(a),
+                       jnp.asarray(a + r.uniform(-.1, .1, (200, 3)).astype(np.float32)),
+                       jnp.asarray(a + r.uniform(-.1, .1, (200, 3)).astype(np.float32)))
+    q = _points(32, seed=12)
+    preds = P.nearest(q, k=3)
+    da, ia = BVH(None, tris).knn(None, preds)
+    db, ib = BruteForce(None, tris).knn(None, preds)
+    assert np.allclose(np.asarray(da), np.asarray(db), atol=1e-5)
+
+
+def test_degenerate_sizes():
+    for n in (0, 1):
+        vals = _points(max(n, 1), seed=20)
+        if n == 0:
+            vals = G.Points(jnp.zeros((0, 3), jnp.float32))
+        bvh = BVH(None, vals)
+        assert bvh.size() == n and bvh.empty() == (n == 0)
+        q = _points(4, seed=21)
+        c = bvh.count(None, P.intersects(G.Spheres(q.coords, jnp.full((4,), 10.0))))
+        assert np.all(np.asarray(c) == n)
+
+
+def test_query_out_transforms_values():
+    """Query flavor (2): output type differs from Value (§2.1.3)."""
+    vals = _points(100)
+    q = _points(10, seed=30)
+    preds = P.intersects(G.Spheres(q.coords, jnp.full((10,), 0.4)))
+    bvh = BVH(None, vals)
+
+    def out_fn(pred, value, index, t):
+        return jnp.sum(value.coords)            # scalar per match
+
+    out, offsets = bvh.query_out(None, preds, out_fn)
+    _, idx, off2 = bvh.query(None, preds)
+    assert np.array_equal(np.asarray(offsets), np.asarray(off2))
+    expect = np.asarray(vals.coords).sum(1)[np.asarray(idx)]
+    assert np.allclose(np.asarray(out), expect, atol=1e-5)
+
+
+def test_attach_data_reaches_callback():
+    """ArborX::attach: per-predicate payload delivered to callbacks."""
+    vals = _points(50)
+    q = _points(8, seed=31)
+    payload = jnp.arange(8, dtype=jnp.float32) * 10
+    preds = P.attach_data(
+        P.intersects(G.Spheres(q.coords, jnp.full((8,), 0.5))), payload)
+
+    def cb(state, pred, value, index, t):
+        return jnp.maximum(state, pred.data), jnp.bool_(False)
+
+    s0 = jnp.full((8,), -1.0)
+    got = BVH(None, vals).query_callback(None, preds, cb, s0)
+    counts = BVH(None, vals).count(
+        None, P.intersects(G.Spheres(q.coords, jnp.full((8,), 0.5))))
+    expect = np.where(np.asarray(counts) > 0, np.asarray(payload), -1.0)
+    assert np.allclose(np.asarray(got), expect)
+
+
+@given(st.sampled_from([2, 3, 17, 128]), st.integers(0, 100000),
+       st.floats(0.05, 0.6), st.sampled_from([2, 3]))
+@settings(max_examples=12, deadline=None)
+def test_property_bvh_equals_bruteforce(n, seed, radius, dim):
+    """The system invariant: BVH(X).query == BruteForce(X).query for any
+    point set and radius (hypothesis-driven)."""
+    r = np.random.default_rng(seed)
+    vals = G.Points(jnp.asarray(r.uniform(0, 1, (n, dim)).astype(np.float32)))
+    q = G.Points(jnp.asarray(r.uniform(0, 1, (8, dim)).astype(np.float32)))
+    preds = P.intersects(G.Spheres(q.coords,
+                                   jnp.full((8,), np.float32(radius))))
+    a = BVH(None, vals).count(None, preds)
+    b = BruteForce(None, vals).count(None, preds)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_early_exit_prunes_traversal():
+    """§2.6 bullet 5: count_with_limit(1) must stop at the first match."""
+    vals = _points(1000)
+    q = _points(16, seed=40)
+    preds = P.intersects(G.Spheres(q.coords, jnp.full((16,), 0.5)))
+    bvh = BVH(None, vals)
+    cb, s0 = CB.count_with_limit(1)
+    s0 = jnp.broadcast_to(s0, (16,))
+    got = bvh.query_callback(None, preds, cb, s0)
+    full = bvh.count(None, preds)
+    assert np.all(np.asarray(got) <= 1)
+    assert np.array_equal(np.asarray(got) > 0, np.asarray(full) > 0)

@@ -1,0 +1,137 @@
+"""DBSCAN vs a naive oracle; EMST vs Prim / scipy."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dbscan import dbscan, relabel_compact
+from repro.core.emst import emst
+
+
+def _dbscan_oracle(X, eps, min_pts):
+    """Naive O(n^2) DBSCAN."""
+    n = len(X)
+    D = np.linalg.norm(X[:, None] - X[None], axis=-1)
+    core = (D <= eps).sum(1) >= min_pts
+    labels = np.full(n, -1)
+    cid = 0
+    for i in range(n):
+        if labels[i] != -1 or not core[i]:
+            continue
+        stack = [i]
+        labels[i] = cid
+        while stack:
+            j = stack.pop()
+            if not core[j]:
+                continue
+            for k in np.where(D[j] <= eps)[0]:
+                if labels[k] == -1:
+                    labels[k] = cid
+                    stack.append(k)
+        cid += 1
+    return labels, core
+
+
+def _same_partition(a, b):
+    """Cluster labelings equal up to renaming (noise = -1 fixed)."""
+    assert len(a) == len(b)
+    m = {}
+    for x, y in zip(a, b):
+        if (x == -1) != (y == -1):
+            return False
+        if x == -1:
+            continue
+        if x in m and m[x] != y:
+            return False
+        m[x] = y
+    return len(set(m.values())) == len(m)
+
+
+@pytest.mark.parametrize("algorithm", ["fdbscan", "fdbscan-densebox"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_dbscan_matches_oracle(algorithm, seed):
+    rng = np.random.default_rng(seed)
+    X = np.concatenate([
+        rng.normal(0, 0.05, (40, 2)),
+        rng.normal(2, 0.05, (40, 2)),
+        rng.uniform(-1, 3, (10, 2)),
+    ]).astype(np.float32)
+    eps, min_pts = 0.2, 5
+    got, got_core = dbscan(X, eps, min_pts, algorithm=algorithm)
+    want, want_core = _dbscan_oracle(X, eps, min_pts)
+    assert np.array_equal(np.asarray(got_core), want_core)
+    assert _same_partition(relabel_compact(got), want)
+
+
+@given(st.integers(0, 10000), st.sampled_from([24, 48]),
+       st.floats(0.05, 0.5), st.sampled_from([3, 5]))
+@settings(max_examples=8, deadline=None)
+def test_dbscan_property(seed, n, eps, min_pts):
+    """FDBSCAN == naive DBSCAN on arbitrary small clouds; the two
+    published variants agree with each other."""
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(0, 1, (n, 2)).astype(np.float32)
+    l1, c1 = dbscan(X, eps, min_pts, algorithm="fdbscan")
+    l2, c2 = dbscan(X, eps, min_pts, algorithm="fdbscan-densebox")
+    want, want_core = _dbscan_oracle(X, eps, min_pts)
+    assert np.array_equal(np.asarray(c1), want_core)
+    assert np.array_equal(np.asarray(c2), want_core)
+    assert _same_partition(relabel_compact(l1), want)
+    assert _same_partition(relabel_compact(l2), want)
+
+
+def _prim_weight(X):
+    n = len(X)
+    D = np.linalg.norm(X[:, None] - X[None], axis=-1)
+    intree = np.zeros(n, bool)
+    intree[0] = True
+    best = D[0].copy()
+    total = 0.0
+    for _ in range(n - 1):
+        j = int(np.argmin(np.where(intree, np.inf, best)))
+        total += best[j]
+        intree[j] = True
+        best = np.minimum(best, D[j])
+    return total
+
+
+@pytest.mark.parametrize("n,dim,seed", [(50, 2, 0), (120, 3, 1), (200, 3, 2),
+                                        (64, 5, 3)])
+def test_emst_weight_matches_prim(n, dim, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(0, 1, (n, dim)).astype(np.float32)
+    eu, ev, ew = emst(X)
+    assert abs(float(np.asarray(ew).sum()) - _prim_weight(X)) < 1e-3
+
+
+def test_emst_is_spanning_tree():
+    rng = np.random.default_rng(5)
+    X = rng.uniform(0, 1, (150, 3)).astype(np.float32)
+    eu, ev, ew = map(np.asarray, emst(X))
+    assert len(eu) == 149 and (eu >= 0).all() and (ev >= 0).all()
+    # union-find connectivity: exactly one component, no cycle
+    parent = list(range(150))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for u, v in zip(eu, ev):
+        ru, rv = find(int(u)), find(int(v))
+        assert ru != rv, "cycle edge in EMST output"
+        parent[ru] = rv
+    assert len({find(i) for i in range(150)}) == 1
+
+
+def test_emst_scipy_crosscheck():
+    scipy = pytest.importorskip("scipy")
+    from scipy.sparse.csgraph import minimum_spanning_tree
+    from scipy.spatial.distance import squareform, pdist
+    rng = np.random.default_rng(6)
+    X = rng.uniform(0, 1, (100, 3)).astype(np.float32)
+    _, _, ew = emst(X)
+    D = squareform(pdist(X))
+    w_scipy = minimum_spanning_tree(D).sum()
+    assert abs(float(np.asarray(ew).sum()) - w_scipy) < 1e-3

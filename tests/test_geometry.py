@@ -1,0 +1,112 @@
+"""Geometry kernels vs numpy oracles + hypothesis properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import geometry as G
+
+rng = np.random.default_rng(0)
+
+
+def test_to_boxes_all_geometries():
+    pts = G.Points(jnp.asarray(rng.uniform(0, 1, (10, 3)).astype(np.float32)))
+    b = G.to_boxes(pts)
+    assert np.allclose(b.lo, pts.coords) and np.allclose(b.hi, pts.coords)
+
+    c = rng.uniform(0, 1, (10, 3)).astype(np.float32)
+    r = rng.uniform(0.1, 0.2, (10,)).astype(np.float32)
+    sb = G.to_boxes(G.Spheres(jnp.asarray(c), jnp.asarray(r)))
+    assert np.allclose(sb.lo, c - r[:, None], atol=1e-6)
+
+    a, bb, cc = (rng.uniform(0, 1, (10, 3)).astype(np.float32) for _ in range(3))
+    tb = G.to_boxes(G.Triangles(jnp.asarray(a), jnp.asarray(bb), jnp.asarray(cc)))
+    assert np.allclose(tb.lo, np.minimum(a, np.minimum(bb, cc)), atol=1e-6)
+
+
+@pytest.mark.parametrize("dim", [1, 2, 3, 5, 10])
+def test_distance_point_box_dims(dim):
+    p = rng.uniform(-1, 2, (50, dim)).astype(np.float32)
+    lo = rng.uniform(0, 0.4, (50, dim)).astype(np.float32)
+    hi = lo + rng.uniform(0.1, 0.5, (50, dim)).astype(np.float32)
+    d = G.distance_point_box(jnp.asarray(p), jnp.asarray(lo), jnp.asarray(hi))
+    dn = np.linalg.norm(np.maximum(np.maximum(lo - p, p - hi), 0), axis=-1)
+    assert np.allclose(np.asarray(d), dn, atol=1e-5)
+
+
+def test_distance_point_triangle_matches_sampling():
+    a, b, c = (rng.uniform(0, 1, (20, 3)).astype(np.float32) for _ in range(3))
+    p = rng.uniform(0, 1, (20, 3)).astype(np.float32)
+    d = np.asarray(G.distance_point_triangle(
+        jnp.asarray(p), jnp.asarray(a), jnp.asarray(b), jnp.asarray(c)))
+    # dense barycentric sampling oracle
+    u = np.linspace(0, 1, 60)
+    uu, vv = np.meshgrid(u, u)
+    m = uu + vv <= 1
+    uu, vv = uu[m], vv[m]
+    pts = (a[:, None] + uu[None, :, None] * (b - a)[:, None]
+           + vv[None, :, None] * (c - a)[:, None])      # (20, M, 3)
+    dmin = np.linalg.norm(pts - p[:, None], axis=-1).min(1)
+    assert np.all(d <= dmin + 1e-4)
+    assert np.allclose(d, dmin, atol=2e-2)
+
+
+def test_ray_box_hit_semantics():
+    o = np.array([[0.5, 0.5, -1.0]], np.float32)
+    d = np.array([[0.0, 0.0, 1.0]], np.float32)
+    lo = np.array([[0.0, 0.0, 0.0]], np.float32)
+    hi = np.array([[1.0, 1.0, 1.0]], np.float32)
+    hit, t = G.ray_box(jnp.asarray(o), jnp.asarray(d), jnp.asarray(lo),
+                       jnp.asarray(hi))
+    assert bool(hit[0]) and abs(float(t[0]) - 1.0) < 1e-6
+    # pointing away -> miss
+    hit2, t2 = G.ray_box(jnp.asarray(o), jnp.asarray(-d), jnp.asarray(lo),
+                         jnp.asarray(hi))
+    assert not bool(hit2[0]) and np.isinf(float(t2[0]))
+
+
+def test_ray_origin_inside_box():
+    o = np.array([[0.5, 0.5, 0.5]], np.float32)
+    d = np.array([[1.0, 0.0, 0.0]], np.float32)
+    hit, t = G.ray_box(jnp.asarray(o), jnp.asarray(d),
+                       jnp.zeros((1, 3)), jnp.ones((1, 3)))
+    assert bool(hit[0]) and float(t[0]) == 0.0
+
+
+def test_ray_triangle_known():
+    a = np.array([[0, 0, 1]], np.float32)
+    b = np.array([[1, 0, 1]], np.float32)
+    c = np.array([[0, 1, 1]], np.float32)
+    o = np.array([[0.2, 0.2, 0]], np.float32)
+    d = np.array([[0, 0, 2.0]], np.float32)   # unnormalized
+    hit, t = G.ray_triangle(jnp.asarray(o), jnp.asarray(d), jnp.asarray(a),
+                            jnp.asarray(b), jnp.asarray(c))
+    assert bool(hit[0]) and abs(float(t[0]) - 0.5) < 1e-6  # t in dir units
+
+
+@given(st.integers(2, 10), st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=10, deadline=None)
+def test_kdop_contains_box(dim_seed, seed):
+    """k-DOP of a point set must contain its AABB along axis directions."""
+    r = np.random.default_rng(seed)
+    pts = r.uniform(-1, 1, (16, 3)).astype(np.float32)
+    dirs = G.kdop_directions(3, 14)
+    support = pts @ np.asarray(dirs).T
+    kd = G.KDOPs(jnp.asarray(support.min(0, keepdims=True)),
+                 jnp.asarray(support.max(0, keepdims=True)), dirs)
+    bb = G.to_boxes(kd)
+    assert np.all(np.asarray(bb.lo) <= pts.min(0) + 1e-6)
+    assert np.all(np.asarray(bb.hi) >= pts.max(0) - 1e-6)
+
+
+def test_point_in_tetrahedron():
+    a = np.zeros(3, np.float32)
+    b = np.array([1, 0, 0], np.float32)
+    c = np.array([0, 1, 0], np.float32)
+    d = np.array([0, 0, 1], np.float32)
+    inside = np.array([[0.1, 0.1, 0.1]], np.float32)
+    outside = np.array([[0.9, 0.9, 0.9]], np.float32)
+    f = lambda p: bool(G.point_in_tetrahedron(
+        jnp.asarray(p), jnp.asarray(a[None]), jnp.asarray(b[None]),
+        jnp.asarray(c[None]), jnp.asarray(d[None]))[0])
+    assert f(inside) and not f(outside)

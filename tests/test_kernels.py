@@ -1,0 +1,104 @@
+"""Pallas kernels vs ref.py oracles: shape/dtype sweeps (interpret mode
+on CPU — identical kernel-body semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+rng = np.random.default_rng(13)
+
+
+@pytest.mark.parametrize("n,dim", [(8, 1), (100, 2), (1000, 3), (513, 4),
+                                   (64, 6), (32, 10)])
+def test_morton_sweep(n, dim):
+    pts = rng.uniform(-2, 3, (n, dim)).astype(np.float32)
+    lo = jnp.asarray(pts.min(0))
+    hi = jnp.asarray(pts.max(0))
+    h1, l1 = ops.morton64(jnp.asarray(pts))
+    h2, l2 = ref.morton64_ref(jnp.asarray(pts), lo, hi)
+    assert np.array_equal(np.asarray(h1), np.asarray(h2))
+    assert np.array_equal(np.asarray(l1), np.asarray(l2))
+
+
+@pytest.mark.parametrize("q,n,dim,k", [
+    (16, 64, 2, 1), (100, 300, 3, 8), (256, 512, 3, 16),
+    (33, 1000, 5, 4), (8, 8, 3, 8),
+])
+def test_bruteforce_knn_sweep(q, n, dim, k):
+    qs = rng.uniform(0, 1, (q, dim)).astype(np.float32)
+    ps = rng.uniform(0, 1, (n, dim)).astype(np.float32)
+    d1, i1 = ops.bruteforce_knn(jnp.asarray(qs), jnp.asarray(ps), k)
+    d2, i2 = ref.bruteforce_knn_ref(jnp.asarray(qs), jnp.asarray(ps), k)
+    assert np.allclose(np.asarray(d1), np.asarray(d2), atol=1e-4)
+    # indices may differ only across exact distance ties
+    same = np.asarray(i1) == np.asarray(i2)
+    if not same.all():
+        dd = np.asarray(d1)[~same]
+        assert np.allclose(dd, np.asarray(d2)[~same], atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_bruteforce_knn_dtypes(dtype):
+    qs = rng.uniform(0, 1, (64, 3)).astype(dtype)
+    ps = rng.uniform(0, 1, (256, 3)).astype(dtype)
+    d1, i1 = ops.bruteforce_knn(jnp.asarray(qs), jnp.asarray(ps), 4)
+    d2, i2 = ref.bruteforce_knn_ref(jnp.asarray(qs).astype(jnp.float32),
+                                    jnp.asarray(ps).astype(jnp.float32), 4)
+    assert np.allclose(np.asarray(d1), np.asarray(d2), atol=1e-2)
+
+
+@pytest.mark.parametrize("r,b,dim", [(16, 64, 2), (100, 300, 3), (257, 513, 3)])
+def test_ray_box_sweep(r, b, dim):
+    o = rng.uniform(0, 1, (r, dim)).astype(np.float32)
+    dv = rng.normal(size=(r, dim)).astype(np.float32)
+    lo = rng.uniform(0, 1, (b, dim)).astype(np.float32)
+    hi = lo + rng.uniform(0.01, 0.3, (b, dim)).astype(np.float32)
+    t1, i1 = ops.ray_box_nearest(*map(jnp.asarray, (o, dv, lo, hi)))
+    t2, i2 = ref.ray_box_nearest_ref(*map(jnp.asarray, (o, dv, lo, hi)))
+    assert np.allclose(np.asarray(t1), np.asarray(t2), atol=1e-5)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+
+
+@pytest.mark.parametrize("b,hq,hkv,sq,skv,d,causal,window", [
+    (1, 4, 4, 128, 128, 64, True, None),
+    (2, 8, 2, 128, 128, 64, True, None),      # GQA 4:1
+    (1, 4, 1, 256, 256, 32, True, None),      # MQA
+    (1, 4, 4, 100, 100, 64, True, None),      # unaligned seq
+    (1, 2, 2, 64, 192, 64, True, None),       # Sq < Skv (continuation)
+    (1, 4, 2, 128, 128, 64, True, 32),        # sliding window
+    (1, 2, 2, 96, 96, 128, False, None),      # bidirectional
+])
+def test_flash_attention_sweep(b, hq, hkv, sq, skv, d, causal, window):
+    q = rng.normal(size=(b, hq, sq, d)).astype(np.float32)
+    k = rng.normal(size=(b, hkv, skv, d)).astype(np.float32)
+    v = rng.normal(size=(b, hkv, skv, d)).astype(np.float32)
+    o1 = ops.flash_attention(*map(jnp.asarray, (q, k, v)), causal=causal,
+                             window=window)
+    o2 = ref.attention_ref(*map(jnp.asarray, (q, k, v)), causal=causal,
+                           window=window)
+    assert float(jnp.max(jnp.abs(o1 - o2))) < 2e-5
+
+
+def test_flash_attention_bf16():
+    q = rng.normal(size=(1, 4, 128, 64)).astype(np.float32)
+    k = rng.normal(size=(1, 4, 128, 64)).astype(np.float32)
+    v = rng.normal(size=(1, 4, 128, 64)).astype(np.float32)
+    o1 = ops.flash_attention(jnp.asarray(q, jnp.bfloat16),
+                             jnp.asarray(k, jnp.bfloat16),
+                             jnp.asarray(v, jnp.bfloat16))
+    assert o1.dtype == jnp.bfloat16
+    o2 = ref.attention_ref(*map(jnp.asarray, (q, k, v)))
+    assert float(jnp.max(jnp.abs(o1.astype(jnp.float32) - o2))) < 0.05
+
+
+def test_flash_blocks_param_sweep():
+    """Block-shape independence: same result for any (bq, bk) tiling."""
+    q = rng.normal(size=(1, 2, 256, 64)).astype(np.float32)
+    k = rng.normal(size=(1, 2, 256, 64)).astype(np.float32)
+    v = rng.normal(size=(1, 2, 256, 64)).astype(np.float32)
+    base = ref.attention_ref(*map(jnp.asarray, (q, k, v)))
+    for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]:
+        o = ops.flash_attention(*map(jnp.asarray, (q, k, v)), bq=bq, bk=bk)
+        assert float(jnp.max(jnp.abs(o - base))) < 2e-5, (bq, bk)

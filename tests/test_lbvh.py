@@ -1,0 +1,104 @@
+"""LBVH structural invariants + hypothesis properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import geometry as G
+from repro.core.lbvh import build
+
+
+def _random_tree(n, dim=3, seed=0, bits=64, refit="rmq"):
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(0, 1, (n, dim)).astype(np.float32)
+    boxes = G.Boxes(jnp.asarray(pts), jnp.asarray(pts + 0.01))
+    return build(boxes, bits=bits, refit=refit), pts
+
+
+@pytest.mark.parametrize("n", [2, 3, 7, 64, 1000])
+@pytest.mark.parametrize("bits", [32, 64])
+def test_structure(n, bits):
+    tree, _ = _random_tree(n, bits=bits)
+    lc = np.asarray(tree.left_child)
+    rc = np.asarray(tree.right_child)
+    # every node except root has exactly one parent
+    child_count = np.zeros(2 * n - 1, int)
+    for c in np.concatenate([lc, rc]):
+        child_count[c] += 1
+    assert child_count[0] == 0                      # root
+    assert np.all(child_count[1:] == 1)
+    # leaf_perm is a permutation
+    assert sorted(np.asarray(tree.leaf_perm).tolist()) == list(range(n))
+
+
+@pytest.mark.parametrize("refit", ["rmq", "iterative"])
+def test_parent_boxes_contain_children(refit):
+    n = 256
+    tree, _ = _random_tree(n, refit=refit)
+    lo = np.asarray(tree.node_lo)
+    hi = np.asarray(tree.node_hi)
+    lc = np.asarray(tree.left_child)
+    rc = np.asarray(tree.right_child)
+    for i in range(n - 1):
+        for c in (lc[i], rc[i]):
+            assert np.all(lo[i] <= lo[c] + 1e-6)
+            assert np.all(hi[i] >= hi[c] - 1e-6)
+
+
+def test_refit_variants_agree():
+    t1, _ = _random_tree(500, refit="rmq")
+    t2, _ = _random_tree(500, refit="iterative")
+    assert np.allclose(t1.node_lo, t2.node_lo, atol=1e-6)
+    assert np.allclose(t1.node_hi, t2.node_hi, atol=1e-6)
+
+
+def test_rope_order_visits_all_leaves():
+    """Stackless rope traversal without pruning must enumerate every leaf
+    exactly once, in sorted (Morton) order."""
+    n = 200
+    tree, _ = _random_tree(n, seed=3)
+    lc = np.asarray(tree.left_child)
+    rope = np.asarray(tree.rope)
+    node, seen = 0, []
+    steps = 0
+    while node != -1 and steps < 10 * n:
+        steps += 1
+        if node >= n - 1:
+            seen.append(node - (n - 1))
+            node = rope[node]
+        else:
+            node = lc[node]
+    assert seen == list(range(n))
+
+
+@given(st.sampled_from([2, 5, 33, 128]), st.integers(0, 10_000),
+       st.sampled_from([2, 3]))
+@settings(max_examples=12, deadline=None)
+def test_rope_property_random(n, seed, dim):
+    tree, _ = _random_tree(n, dim=dim, seed=seed)
+    rope = np.asarray(tree.rope)
+    range_last = np.asarray(tree.range_last)
+    # rope target's subtree starts right after this node's range
+    for node in range(2 * n - 1):
+        r = rope[node]
+        if r == -1:
+            assert range_last[node] == n - 1
+    # all ropes point strictly forward in sorted order
+    lc = np.asarray(tree.left_child)
+    node, steps = 0, 0
+    while node != -1 and steps < 10 * n:
+        steps += 1
+        nxt = rope[node] if node >= n - 1 else lc[node]
+        node = nxt
+    assert steps < 10 * n                           # traversal terminates
+
+
+def test_duplicate_points_build():
+    """Duplicate coordinates must still build a valid tree (index
+    tie-break, Karras §4)."""
+    pts = np.zeros((64, 3), np.float32)
+    boxes = G.Boxes(jnp.asarray(pts), jnp.asarray(pts))
+    tree = build(boxes)
+    assert sorted(np.asarray(tree.leaf_perm).tolist()) == list(range(64))
+    # single point repeated: root box is degenerate at 0
+    assert np.allclose(tree.node_lo[0], 0.0)

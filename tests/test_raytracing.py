@@ -1,0 +1,96 @@
+"""Ray tracing predicates (§2.5) vs brute-force oracles."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import geometry as G, raytracing as RT
+from repro.core.bvh import BVH
+
+rng = np.random.default_rng(9)
+
+
+def _tri_soup(n=200, seed=1):
+    r = np.random.default_rng(seed)
+    a = r.uniform(0, 1, (n, 3)).astype(np.float32)
+    b = a + r.uniform(-0.1, 0.1, (n, 3)).astype(np.float32)
+    c = a + r.uniform(-0.1, 0.1, (n, 3)).astype(np.float32)
+    return (G.Triangles(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c)),
+            (a, b, c))
+
+
+def _rays(n=25, seed=2):
+    r = np.random.default_rng(seed)
+    o = r.uniform(0, 1, (n, 3)).astype(np.float32)
+    d = r.normal(size=(n, 3)).astype(np.float32)
+    return G.Rays(jnp.asarray(o), jnp.asarray(d)), (o, d)
+
+
+def _oracle_hits(o, d, abc):
+    a, b, c = abc
+    hit, t = G.ray_triangle(o[:, None], d[:, None], a[None], b[None], c[None])
+    return np.asarray(hit), np.asarray(t)
+
+
+def test_intersect_counts():
+    tris, abc = _tri_soup()
+    rays, (o, d) = _rays()
+    bvh = BVH(None, tris)
+    hit, _ = _oracle_hits(o, d, abc)
+    _, idx, off = RT.cast_intersect(bvh, rays)
+    assert np.array_equal(np.diff(np.asarray(off)), hit.sum(1))
+
+
+def test_nearest_first_k_ordered():
+    tris, abc = _tri_soup()
+    rays, (o, d) = _rays()
+    bvh = BVH(None, tris)
+    hit, t = _oracle_hits(o, d, abc)
+    t = np.where(hit, t, np.inf)
+    k = 4
+    tk, ik = RT.cast_nearest(bvh, rays, k=k)
+    want = np.sort(t, axis=1)[:, :k]
+    assert np.allclose(np.asarray(tk), want, atol=1e-5)
+    # k=1 == the closest object (§2.5)
+    t1, i1 = RT.cast_nearest(bvh, rays, k=1)
+    assert np.allclose(np.asarray(t1)[:, 0], want[:, 0], atol=1e-5)
+
+
+def test_ordered_intersect_is_sorted_and_complete():
+    tris, abc = _tri_soup()
+    rays, (o, d) = _rays()
+    bvh = BVH(None, tris)
+    hit, t = _oracle_hits(o, d, abc)
+    fi, ft, off = RT.cast_ordered(bvh, rays)
+    off = np.asarray(off)
+    for q in range(len(o)):
+        seg_t = np.asarray(ft[off[q]:off[q + 1]])
+        seg_i = np.asarray(fi[off[q]:off[q + 1]])
+        assert np.all(np.diff(seg_t) >= -1e-7), "not in encounter order"
+        want_idx = set(np.where(hit[q])[0].tolist())
+        assert set(seg_i.tolist()) == want_idx
+
+
+def test_spheres_ray_nearest():
+    r = np.random.default_rng(3)
+    c = r.uniform(0, 1, (100, 3)).astype(np.float32)
+    rad = r.uniform(0.02, 0.08, (100,)).astype(np.float32)
+    spheres = G.Spheres(jnp.asarray(c), jnp.asarray(rad))
+    rays, (o, d) = _rays(seed=4)
+    bvh = BVH(None, spheres)
+    hit, t = G.ray_sphere(o[:, None], d[:, None], c[None], rad[None])
+    t = np.where(np.asarray(hit), np.asarray(t), np.inf)
+    t1, i1 = RT.cast_nearest(bvh, rays, k=1)
+    assert np.allclose(np.asarray(t1)[:, 0], t.min(1), atol=1e-5)
+
+
+def test_boxes_ray_tracing():
+    r = np.random.default_rng(5)
+    lo = r.uniform(0, 1, (150, 3)).astype(np.float32)
+    hi = lo + r.uniform(0.02, 0.1, (150, 3)).astype(np.float32)
+    boxes = G.Boxes(jnp.asarray(lo), jnp.asarray(hi))
+    rays, (o, d) = _rays(seed=6)
+    bvh = BVH(None, boxes)
+    hit, t = G.ray_box(o[:, None], d[:, None], lo[None], hi[None])
+    counts = np.asarray(hit).sum(1)
+    _, idx, off = RT.cast_intersect(bvh, rays)
+    assert np.array_equal(np.diff(np.asarray(off)), counts)

@@ -1,0 +1,102 @@
+"""Decode-vs-forward consistency per family + ring-cache semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_archs, get_config
+from repro.models import lm, serve
+
+KEY = jax.random.PRNGKey(0)
+
+# capacity-based MoE drops tokens differently between full-sequence
+# dispatch and per-token decode (inherent to the algorithm) — consistency
+# is only exact with a capacity factor high enough to avoid drops.
+NO_DROP = {"capacity_factor": 8.0}
+
+
+def _consistency(cfg, S=24, atol=2e-3):
+    import dataclasses
+    if cfg.is_moe:
+        cfg = dataclasses.replace(cfg, **NO_DROP)
+    params = lm.init_params(cfg, KEY)
+    tokens = jax.random.randint(KEY, (2, S), 0, cfg.vocab)
+    extra = {}
+    if cfg.family == "encdec":
+        extra["src_embeds"] = jax.random.normal(KEY, (2, 16, cfg.d_model))
+    if cfg.family == "vlm":
+        # decode parity checked without the patch prefix
+        pass
+    fwd, _ = lm.forward(cfg, params, tokens,
+                        src_embeds=extra.get("src_embeds"))
+    cache = serve.init_cache(cfg, 2, S, dtype=jnp.float32)
+    if cfg.family == "encdec":
+        cache = serve.prefill_encoder(cfg, params, cache, extra["src_embeds"])
+    cache, dec = serve.prefill(cfg, params, cache, tokens)
+    return float(jnp.max(jnp.abs(fwd - dec)))
+
+
+@pytest.mark.parametrize("arch", [a for a in all_archs() if a !=
+                                  "llava-next-mistral-7b"])
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch, smoke=True)
+    # hybrid accumulates through 5 layers of gated norms: accumulation
+    # order differs between chunked-SSD forward and stepwise decode,
+    # ~0.1% relative on O(40) logits
+    tol = 1e-1 if cfg.family == "hybrid" else 2e-3
+    assert _consistency(cfg) < tol
+
+
+def test_ring_cache_equals_full_window_attention():
+    """SWA ring cache (W == window) must reproduce full-buffer decoding."""
+    import dataclasses
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    cfg = dataclasses.replace(cfg, window=8)
+    params = lm.init_params(cfg, KEY)
+    S = 24
+    tokens = jax.random.randint(KEY, (1, S), 0, cfg.vocab)
+
+    # full-length cache (capacity >= S, masked to the window)
+    cache_full = serve.init_cache(cfg, 1, S, dtype=jnp.float32)
+    _, dec_full = serve.prefill(cfg, params, cache_full, tokens)
+
+    # ring cache of exactly window size
+    cache_ring = serve.init_cache(cfg, 1, cfg.window, dtype=jnp.float32)
+    _, dec_ring = serve.prefill(cfg, params, cache_ring, tokens)
+    assert float(jnp.max(jnp.abs(dec_full - dec_ring))) < 1e-4
+
+
+def test_mla_latent_cache_shapes():
+    cfg = get_config("deepseek-v3-671b", smoke=True)
+    cache = serve.init_cache(cfg, 2, 16)
+    assert cache["ckv"].shape == (cfg.n_layers, 2, 16, cfg.kv_lora_rank)
+    assert cache["kr"].shape == (cfg.n_layers, 2, 16, cfg.qk_rope_dim)
+    # the MLA cache is much smaller than materialized K/V would be
+    kv_full = cfg.n_layers * 2 * 16 * cfg.n_heads * (cfg.qk_nope_dim
+                                                     + cfg.v_head_dim)
+    kv_lat = cache["ckv"].size + cache["kr"].size
+    assert kv_lat * 4 < kv_full
+
+
+def test_generation_deterministic():
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    params = lm.init_params(cfg, KEY)
+    cache = serve.init_cache(cfg, 1, 20, dtype=jnp.float32)
+    prompts = jax.random.randint(KEY, (1, 8), 0, cfg.vocab)
+    cache, logits = serve.prefill(cfg, params, cache, prompts)
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    seq1 = [int(tok[0, 0])]
+    for _ in range(6):
+        lg, cache = serve.decode_step(cfg, params, cache, tok)
+        tok = jnp.argmax(lg[:, -1:], -1).astype(jnp.int32)
+        seq1.append(int(tok[0, 0]))
+    # regenerate: same result
+    cache = serve.init_cache(cfg, 1, 20, dtype=jnp.float32)
+    cache, logits = serve.prefill(cfg, params, cache, prompts)
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    seq2 = [int(tok[0, 0])]
+    for _ in range(6):
+        lg, cache = serve.decode_step(cfg, params, cache, tok)
+        tok = jnp.argmax(lg[:, -1:], -1).astype(jnp.int32)
+        seq2.append(int(tok[0, 0]))
+    assert seq1 == seq2
