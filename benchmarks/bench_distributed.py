@@ -14,12 +14,12 @@ from ._util import row
 
 _CODE = """
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
+from repro.compat import AxisType, make_mesh
 from repro.core.distributed import DistributedTree
 from repro.launch.hloanalysis import analyze
 
 R = __R__
-mesh = jax.make_mesh((R,), ("data",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((R,), ("data",), axis_types=(AxisType.Auto,))
 N, Q = 1024, 256
 rng = np.random.default_rng(0)
 pts = jnp.asarray(rng.uniform(0, 1, (N, 3)).astype(np.float32))

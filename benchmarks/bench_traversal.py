@@ -1,8 +1,14 @@
-"""§2.6 bullet 3: stackless (rope) traversal vs explicit-stack traversal.
+"""§2.6 bullet 3: stackless (rope) traversal vs explicit-stack traversal,
+plus the QueryEngine path comparison (DESIGN.md §3).
 
 The stack variant carries a fixed 64-deep stack array per query lane —
 the per-lane memory the paper's stackless algorithm removes. Both produce
 identical counts; the time and state-size difference is the claim.
+
+The engine section times the SAME spatial-count batch through all three
+execution paths (MXU brute force, fused Pallas stackless kernel, vmapped
+while-loop) for N in {1e4, 1e5} — the numbers that set the
+``EngineConfig`` crossover constants.
 """
 import jax
 import jax.numpy as jnp
@@ -10,6 +16,8 @@ import numpy as np
 
 from repro.core import geometry as G, predicates as P, callbacks as CB
 from repro.core.bvh import BVH
+from repro.core.engine import (ROUTE_BRUTEFORCE, ROUTE_LOOP, ROUTE_PALLAS,
+                               EngineConfig, QueryEngine)
 from repro.core.lbvh import build
 from repro.data import point_cloud
 
@@ -56,7 +64,29 @@ def _stack_count(tree, values, preds):
     return jax.jit(lambda p: jax.vmap(one)(p))(preds)
 
 
+def bench_engine_paths(n: int, q: int = 512, radius: float = 0.05):
+    """Time one spatial-count batch through every engine route."""
+    pts = point_cloud("uniform", n, seed=2)
+    qp = point_cloud("uniform", q, seed=3)
+    vals = G.Points(jnp.asarray(pts))
+    preds = P.intersects(G.Spheres(jnp.asarray(qp),
+                                   jnp.full((q,), radius, jnp.float32)))
+    times = {}
+    counts = {}
+    for route in (ROUTE_LOOP, ROUTE_PALLAS, ROUTE_BRUTEFORCE):
+        bvh = BVH(None, vals, engine=QueryEngine(EngineConfig(force=route)))
+        times[route] = timeit(lambda b=bvh: b.count(None, preds))
+        counts[route] = np.asarray(bvh.count(None, preds))
+        row(f"engine/N={n}/Q={q}/{route}", times[route],
+            f"speedup_vs_loop={times[ROUTE_LOOP] / times[route]:.2f}x")
+    assert np.array_equal(counts[ROUTE_LOOP], counts[ROUTE_BRUTEFORCE])
+    assert np.array_equal(counts[ROUTE_LOOP], counts[ROUTE_PALLAS])
+    return times
+
+
 def main():
+    for n in (10_000, 100_000):
+        bench_engine_paths(n)
     n, q = 32768, 4096
     pts = point_cloud("uniform", n, seed=2)
     qp = point_cloud("uniform", q, seed=3)

@@ -14,15 +14,14 @@ if "XLA_FLAGS" not in os.environ:
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
+from repro.compat import AxisType, make_mesh
 
 from repro.core.distributed import DistributedTree
 from repro.data import point_cloud
 
 
 def main():
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
     print(f"mesh: {mesh.shape} over {len(jax.devices())} devices")
 
     pts = jnp.asarray(point_cloud("clusters", 4096, seed=1))

@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Tier-1 verification runner (ROADMAP.md). Collection errors ARE failures:
+# pytest exits 2 on collection errors and nonzero on test failures; both
+# fail this script. -p no:cacheprovider keeps the tree clean for CI diffing.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -q -p no:cacheprovider "$@"

@@ -1,10 +1,11 @@
 """ArborX 2.0 in JAX: performance-portable geometric search (the paper's
 primary contribution). See DESIGN.md for the GPU->TPU adaptation map."""
-from . import access, callbacks, geometry, morton, predicates, traversal
+from . import access, callbacks, engine, geometry, morton, predicates, traversal
 from .brute_force import BruteForce
 from .bvh import BVH
 from .dbscan import dbscan
 from .distributed import DistributedTree
+from .engine import EngineConfig, QueryEngine, default_engine, set_default_engine
 from .emst import emst
 from .interpolation import mls_interpolate
 from .lbvh import LBVH, build
@@ -13,7 +14,8 @@ from .raytracing import cast_intersect, cast_nearest, cast_ordered
 
 __all__ = [
     "BVH", "BruteForce", "DistributedTree", "LBVH", "build",
+    "QueryEngine", "EngineConfig", "default_engine", "set_default_engine",
     "intersects", "nearest", "dbscan", "emst", "mls_interpolate",
     "cast_nearest", "cast_intersect", "cast_ordered",
-    "access", "callbacks", "geometry", "morton", "predicates", "traversal",
+    "access", "callbacks", "engine", "geometry", "morton", "predicates", "traversal",
 ]

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from . import callbacks as CB
+from . import engine as E
 from . import geometry as G
 from . import lbvh
 from . import predicates as P
@@ -37,12 +38,20 @@ __all__ = ["BVH"]
 
 class BVH:
     def __init__(self, space, values, indexable_getter=default_indexable_getter,
-                 *, bits: int = 64, refit: str = "rmq"):
+                 *, bits: int = 64, refit: str = "rmq", engine=None):
         self.space = space
         self.values = values
+        self._getter = indexable_getter
+        self._engine = engine if engine is not None else E.default_engine()
         boxes = indexable_getter(values)
         self._n = len(boxes)
         self._boxes = boxes
+        # the fused kernel's leaf test is the box test; it is exact only for
+        # values whose fine test equals their bounding-box test
+        self.pallas_values_ok = (
+            indexable_getter is default_indexable_getter
+            and isinstance(values, (G.Points, G.Boxes)))
+        self._bf = None
         if self._n >= 2:
             device = space if space is not None else None
             self.tree = lbvh.build(boxes, bits=bits, refit=refit)
@@ -50,6 +59,13 @@ class BVH:
                 self.tree = jax.device_put(self.tree, device)
         else:
             self.tree = None  # degenerate; queries fall back to linear scan
+
+    def _brute(self):
+        """Lazy MXU-path sibling index over the same values (engine route)."""
+        if self._bf is None:
+            from .brute_force import BruteForce
+            self._bf = BruteForce(self.space, self.values, self._getter)
+        return self._bf
 
     # --- container interface (§2.1.3) -----------------------------------
     def size(self) -> int:
@@ -82,8 +98,14 @@ class BVH:
         """
         nq = len(predicates)
         if capacity is None:
+            if (self.tree is not None
+                    and self._engine.route_spatial(self, predicates)
+                    == E.ROUTE_BRUTEFORCE):
+                # unclamped + brute-force route: one-pass CSR (the two-pass
+                # count->fill would run the (Q, N) match matrix twice)
+                return self._brute().query(space, predicates)
             counts = self.count(space, predicates)
-            capacity = max(int(counts.max()), 1)
+            capacity = max(int(counts.max()), 1) if nq else 1
         counts, idx_buf = self._fill(predicates, capacity)
         offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
                                    jnp.cumsum(jnp.minimum(counts, capacity))]).astype(jnp.int32)
@@ -107,11 +129,30 @@ class BVH:
 
     # --- helpers ----------------------------------------------------------
     def count(self, space, predicates):
+        """Per-query match counts, dispatched by the engine (DESIGN.md §3):
+        MXU all-pairs, fused Pallas traversal, or the vmapped while loop.
+        All three produce identical int32 counts."""
+        if self.tree is not None:
+            route = self._engine.route_spatial(self, predicates)
+            if route == E.ROUTE_BRUTEFORCE:
+                return self._brute().count(space, predicates)
+            if route == E.ROUTE_PALLAS:
+                return self._engine.pallas_count(self, predicates)
         cb, s0 = CB.counting()
         s0 = _bcast_state(s0, len(predicates))
         return self.query_callback(space, predicates, cb, s0)
 
     def _fill(self, predicates, capacity):
+        """(counts, idx_buf (Q, capacity)): full counts plus the first
+        `capacity` matched indices per query (engine-dispatched; the match
+        SET per query is path-independent, the buffer order is not)."""
+        if self.tree is not None:
+            route = self._engine.route_spatial(self, predicates, capacity)
+            if route == E.ROUTE_BRUTEFORCE:
+                return self._engine.bruteforce_fill(self._brute(), predicates,
+                                                    capacity)
+            if route == E.ROUTE_PALLAS:
+                return self._engine.pallas_fill(self, predicates, capacity)
         cb, s0 = CB.collect_hits(capacity)
         s0 = _bcast_state(s0, len(predicates))
         count, idxs, _ = self.query_callback(None, predicates, cb, s0)
@@ -119,10 +160,16 @@ class BVH:
 
     # --- nearest (fine kNN, §2.1.2) --------------------------------------
     def knn(self, space, predicates):
-        """For Nearest predicates: returns (dists, idxs) (N_q, k)."""
+        """For Nearest predicates: returns (dists, idxs) (N_q, k),
+        engine-dispatched like count()."""
         k = predicates.k
         if self.tree is None:
             return _degenerate_knn(self.values, self._boxes, self._n, predicates, k)
+        route = self._engine.route_knn(self, predicates)
+        if route == E.ROUTE_BRUTEFORCE:
+            return self._brute().knn(space, predicates)
+        if route == E.ROUTE_PALLAS:
+            return self._engine.pallas_knn(self, predicates)
         return T.traverse_knn(self.tree, self.values, predicates, k)
 
 

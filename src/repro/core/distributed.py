@@ -32,6 +32,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 from . import geometry as G
 from . import predicates as Pred
 from . import traversal as T
@@ -63,7 +65,7 @@ class DistributedTree:
             return tree, (top_lo, top_hi), c
 
         spec = P(axis)
-        built = jax.jit(jax.shard_map(
+        built = jax.jit(shard_map(
             build_local, mesh=mesh, in_specs=(spec,),
             out_specs=(spec, (spec, spec), spec), check_vma=False))(coords)
         self.trees, (self.top_lo, self.top_hi), self.coords = built
@@ -107,7 +109,7 @@ class DistributedTree:
                     jnp.take_along_axis(gi, order, 1))
 
         spec = P(axis)
-        return jax.jit(jax.shard_map(
+        return jax.jit(shard_map(
             step, mesh=self.mesh, in_specs=(spec, spec, spec),
             out_specs=(spec, spec), check_vma=False))(
                 self.trees, self.coords, queries)
@@ -154,7 +156,7 @@ class DistributedTree:
                 lambda a: jax.lax.dynamic_slice_in_dim(a, r * qloc, qloc), states)
 
         spec = P(axis)
-        return jax.jit(jax.shard_map(
+        return jax.jit(shard_map(
             step, mesh=self.mesh, in_specs=(spec, spec, spec),
             out_specs=spec, check_vma=False))(
                 self.trees, self.coords, queries)
@@ -197,7 +199,7 @@ class DistributedTree:
                     jnp.take_along_axis(gi, order, 1))
 
         spec = P(axis)
-        return jax.jit(jax.shard_map(
+        return jax.jit(shard_map(
             step, mesh=self.mesh, in_specs=(spec,) * 4,
             out_specs=(spec, spec), check_vma=False))(
                 self.trees, self.coords, origins, directions)
@@ -230,7 +232,7 @@ class DistributedTree:
             return jnp.moveaxis(vals, 0, 1), jnp.moveaxis(count, 0, 1)
 
         spec = P(axis)
-        return jax.jit(jax.shard_map(
+        return jax.jit(shard_map(
             step, mesh=self.mesh, in_specs=(spec, spec, spec),
             out_specs=(spec, spec), check_vma=False))(
                 self.trees, self.coords, queries)

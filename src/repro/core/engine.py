@@ -1,0 +1,195 @@
+"""QueryEngine: per-batch dispatch between the three query execution paths
+(DESIGN.md §3).
+
+ArborX 2.0's headline is that the *same* query API is served by different
+index structures whose crossover depends on hardware (brute force wins for
+small N / fat queries; the BVH wins asymptotically). On TPU there are three
+distinct engines for one batched query:
+
+  * ``bruteforce`` — the MXU path: all-pairs leaf tests / distance matrix
+    (``BruteForce``). Exact by construction; fastest while N·Q is small
+    because a (Q, N) panel is one matmul-shaped pass.
+  * ``pallas``     — the fused stackless-traversal kernel
+    (``kernels.bvh_traverse``): whole tree staged through VMEM, a block of
+    queries per grid cell, one int32 cursor per lane.
+  * ``loop``       — the vmapped ``lax.while_loop`` traversal
+    (``core.traversal``): fully general (any predicate kind, any value
+    geometry, arbitrary callbacks); the fallback whenever a query is not
+    expressible in the kernel's unified box/r² form.
+
+Routing is static (Python-level: N, Q, predicate type, value geometry), so
+it never traces into jit. Crossover constants are measured by
+``benchmarks/bench_traversal.py`` and are overridable per engine instance
+(or via ``REPRO_ENGINE_FORCE`` for A/B runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.bvh_traverse import bvh_traverse_knn, bvh_traverse_spatial
+from . import geometry as G
+from . import predicates as P
+
+__all__ = ["EngineConfig", "QueryEngine", "default_engine",
+           "set_default_engine", "ROUTE_BRUTEFORCE", "ROUTE_PALLAS",
+           "ROUTE_LOOP"]
+
+ROUTE_BRUTEFORCE = "bruteforce"
+ROUTE_PALLAS = "pallas"
+ROUTE_LOOP = "loop"
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    """Crossover constants (defaults measured on the CPU interpret backend
+    by ``benchmarks/bench_traversal.py``; override for real TPU pods).
+
+    brute_force_max_work: route to the MXU all-pairs path while N·Q is
+        below this (the (Q, N) panel is one matmul-shaped pass).
+    pallas_min_queries / pallas_min_leaves: below these the vmapped
+        while-loop path wins (kernel launch + VMEM staging don't amortize).
+    pallas_max_nodes: tree tables larger than this don't fit VMEM
+        (~16 MB/core); stay on the while-loop path.
+    pallas_max_capacity: fill/kNN buffers wider than this per query would
+        blow the kernel's VMEM output block; stay off the pallas path.
+    use_pallas: master switch for the fused kernel path.
+    force: route every eligible query to one path ("bruteforce" |
+        "pallas" | "loop"); queries the forced path cannot express fall
+        back to the normal heuristic choice.
+    """
+    brute_force_max_work: int = 1 << 22
+    pallas_min_queries: int = 128
+    pallas_min_leaves: int = 256
+    pallas_max_nodes: int = 1 << 17
+    pallas_max_capacity: int = 4096
+    use_pallas: bool = True
+    force: str | None = None
+
+    def __post_init__(self):
+        routes = (ROUTE_BRUTEFORCE, ROUTE_PALLAS, ROUTE_LOOP)
+        if self.force is not None and self.force not in routes:
+            raise ValueError(f"force={self.force!r} is not one of {routes}")
+        env = os.environ.get("REPRO_ENGINE_FORCE")
+        if self.force is None and env:
+            if env not in routes:
+                raise ValueError(
+                    f"REPRO_ENGINE_FORCE={env!r} is not one of {routes}")
+            self.force = env
+
+
+def _spatial_rep(predicates):
+    """Unified (q_lo, q_hi, r) form of an Intersects batch, or None when
+    the geometry kind has no exact box/radius spelling."""
+    if not isinstance(predicates, P.Intersects):
+        return None
+    g = predicates.geom
+    if isinstance(g, G.Points):
+        z = jnp.zeros((g.coords.shape[0],), jnp.float32)
+        return g.coords, g.coords, z
+    if isinstance(g, G.Boxes):
+        z = jnp.zeros((g.lo.shape[0],), jnp.float32)
+        return g.lo, g.hi, z
+    if isinstance(g, G.Spheres):
+        return g.center, g.center, g.radius.astype(jnp.float32)
+    return None
+
+
+class QueryEngine:
+    """Dispatches batched BVH queries to bruteforce / pallas / loop."""
+
+    def __init__(self, config: EngineConfig | None = None):
+        self.config = config or EngineConfig()
+
+    # -- routing ----------------------------------------------------------
+    def route_spatial(self, bvh, predicates, capacity: int | None = None) -> str:
+        """Route an Intersects batch for count/fill. Ray predicates and
+        exotic geometries always take the loop path; fill passes whose
+        per-query buffer would blow the VMEM output block stay off pallas."""
+        cfg = self.config
+        q = len(predicates)
+        bf_ok = isinstance(predicates, P.Intersects)
+        pl_ok = (cfg.use_pallas and bvh.tree is not None and q > 0
+                 and bvh.pallas_values_ok
+                 and _spatial_rep(predicates) is not None
+                 and 2 * bvh.size() - 1 <= cfg.pallas_max_nodes
+                 and (capacity is None or capacity <= cfg.pallas_max_capacity))
+        return self._pick(bvh.size(), q, bf_ok, pl_ok)
+
+    def route_knn(self, bvh, predicates) -> str:
+        cfg = self.config
+        q = len(predicates)
+        bf_ok = isinstance(predicates, P.Nearest)
+        pl_ok = (cfg.use_pallas and bvh.tree is not None and bf_ok and q > 0
+                 and bvh.pallas_values_ok
+                 and predicates.k <= cfg.pallas_max_capacity
+                 and 2 * bvh.size() - 1 <= cfg.pallas_max_nodes)
+        return self._pick(bvh.size(), q, bf_ok, pl_ok)
+
+    def _pick(self, n: int, q: int, bf_ok: bool, pl_ok: bool) -> str:
+        cfg = self.config
+        if cfg.force == ROUTE_BRUTEFORCE and bf_ok:
+            return ROUTE_BRUTEFORCE
+        if cfg.force == ROUTE_PALLAS and pl_ok:
+            return ROUTE_PALLAS
+        if cfg.force == ROUTE_LOOP:
+            return ROUTE_LOOP
+        if bf_ok and n * q <= cfg.brute_force_max_work:
+            return ROUTE_BRUTEFORCE
+        if (pl_ok and q >= cfg.pallas_min_queries
+                and n >= cfg.pallas_min_leaves):
+            return ROUTE_PALLAS
+        return ROUTE_LOOP
+
+    # -- pallas execution --------------------------------------------------
+    def pallas_count(self, bvh, predicates):
+        """(Q,) int32 match counts via the fused kernel."""
+        counts, _ = self.pallas_fill(bvh, predicates, 1)
+        return counts
+
+    def pallas_fill(self, bvh, predicates, capacity: int):
+        """(counts, idx_buf): the ``collect_hits`` contract — full counts
+        plus the first `capacity` matched indices in traversal order."""
+        q_lo, q_hi, r = _spatial_rep(predicates)
+        t = bvh.tree
+        # Points values take the sqrt-form fine test (distance <= r), the
+        # bit-exact twin of predicates.leaf_match_test for them
+        fine_sqrt = isinstance(bvh.values, G.Points)
+        return bvh_traverse_spatial(
+            t.node_lo, t.node_hi, t.rope, t.left_child, t.range_last,
+            t.leaf_perm, q_lo, q_hi, r, capacity=capacity,
+            fine_sqrt=fine_sqrt)
+
+    def pallas_knn(self, bvh, predicates):
+        """(dists, idxs) (Q, k) via the fused kernel. Query point is the
+        geometry centroid — exactly what ``predicates.leaf_distance``
+        measures fine distances from."""
+        t = bvh.tree
+        qc = G.centroid(predicates.geom)
+        return bvh_traverse_knn(t.node_lo, t.node_hi, t.rope, t.left_child,
+                                t.leaf_perm, qc, k=predicates.k)
+
+    # -- brute-force fill (index-ordered; sets match traversal order) -----
+    def bruteforce_fill(self, brute, predicates, capacity: int):
+        mask = brute._match_matrix(predicates)           # (Q, N) bool
+        counts = mask.sum(-1).astype(jnp.int32)
+        n = mask.shape[1]
+        key = jnp.where(mask, jnp.arange(n, dtype=jnp.int32)[None, :], n)
+        first = jax.lax.sort(key, dimension=1)[:, :capacity]
+        buf = jnp.where(first < n, first, -1).astype(jnp.int32)
+        return counts, buf
+
+
+_DEFAULT = QueryEngine()
+
+
+def default_engine() -> QueryEngine:
+    return _DEFAULT
+
+
+def set_default_engine(engine: QueryEngine):
+    global _DEFAULT
+    _DEFAULT = engine

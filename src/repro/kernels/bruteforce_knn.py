@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import compiler_params
+
 _BIG = float("inf")
 
 
@@ -116,7 +118,6 @@ def bruteforce_knn_pallas(queries, points, k: int, *, n_actual: int | None = Non
             pltpu.VMEM((bq, k), jnp.float32),
             pltpu.VMEM((bq, k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=compiler_params(dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(queries, points)

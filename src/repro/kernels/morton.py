@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import compiler_params
+
 
 def _morton_kernel(coords_ref, lo_ref, hi_ref, out_hi_ref, out_lo_ref,
                    *, bits: int, dim: int):
@@ -70,7 +72,6 @@ def morton64_pallas(coords, scene_lo, scene_hi, *, bn: int = 1024,
             jax.ShapeDtypeStruct((n,), jnp.uint32),
             jax.ShapeDtypeStruct((n,), jnp.uint32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel",)),
+        compiler_params=compiler_params(dimension_semantics=("parallel",)),
         interpret=interpret,
     )(coords, scene_lo.reshape(1, dim), scene_hi.reshape(1, dim))

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import compiler_params
+
 
 def _ray_box_kernel(o_ref, d_ref, lo_ref, hi_ref, t_out, i_out,
                     run_t, run_i, *, dim: int, bb: int, b_actual: int,
@@ -113,7 +115,6 @@ def ray_box_nearest_pallas(origins, directions, box_lo, box_hi, *,
             pltpu.VMEM((br,), jnp.float32),
             pltpu.VMEM((br,), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=compiler_params(dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(origins, directions, box_lo, box_hi)

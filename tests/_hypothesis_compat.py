@@ -1,0 +1,126 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (sandbox has no network,
+so the real package may be absent). conftest.py installs this module as
+``sys.modules["hypothesis"]`` ONLY when the real library is missing.
+
+Scope: exactly what this test suite uses — ``@given`` over positional
+strategies, ``@settings(max_examples=..., deadline=...)``, and the
+``integers`` / ``floats`` / ``sampled_from`` strategies. Instead of random
+search + shrinking, ``@given`` replays a fixed, deterministic example set:
+the boundary values of each strategy first, then pseudo-random draws seeded
+from the test name (stable across runs and processes — no PYTHONHASHSEED
+dependence).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+import zlib
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    """A strategy = a deterministic example sequence. ``example(i, rng)``
+    returns boundary values for small i, seeded-random draws afterwards."""
+
+    def __init__(self, boundary, draw):
+        self._boundary = list(boundary)
+        self._draw = draw
+
+    def example(self, i, rng):
+        if i < len(self._boundary):
+            return self._boundary[i]
+        return self._draw(rng)
+
+
+def integers(min_value=None, max_value=None):
+    lo = 0 if min_value is None else min_value
+    hi = (1 << 16) if max_value is None else max_value
+    return _Strategy([lo, hi], lambda rng: rng.randint(lo, hi))
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    lo, hi = float(min_value), float(max_value)
+    return _Strategy([lo, hi], lambda rng: rng.uniform(lo, hi))
+
+
+def sampled_from(elements):
+    elems = list(elements)
+    return _Strategy(elems, lambda rng: rng.choice(elems))
+
+
+def booleans():
+    return _Strategy([False, True], lambda rng: rng.random() < 0.5)
+
+
+class settings:
+    """Decorator recording max_examples; deadline/others are ignored."""
+
+    def __init__(self, max_examples=_DEFAULT_MAX_EXAMPLES, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, f):
+        f._hypshim_settings = self
+        return f
+
+
+def given(*strats, **kwstrats):
+    def deco(f):
+        inner = f
+
+        @functools.wraps(inner)
+        def wrapper(*args, **kwargs):
+            s = (getattr(wrapper, "_hypshim_settings", None)
+                 or getattr(inner, "_hypshim_settings", None))
+            n = s.max_examples if s else _DEFAULT_MAX_EXAMPLES
+            seed_base = zlib.crc32(inner.__qualname__.encode("utf-8"))
+            for i in range(n):
+                rng = random.Random(seed_base * 1000003 + i)
+                drawn = [st.example(i, rng) for st in strats]
+                kw = {k: st.example(i, rng) for k, st in kwstrats.items()}
+                try:
+                    inner(*args, *drawn, **kw, **kwargs)
+                except _AssumptionSkipped:
+                    continue
+
+        # Hide the strategy-filled parameters from pytest's fixture
+        # resolution (functools.wraps exposes the inner signature otherwise).
+        sig = inspect.signature(inner)
+        params = list(sig.parameters.values())[len(strats):]
+        params = [p for p in params if p.name not in kwstrats]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        wrapper.__dict__.pop("__wrapped__", None)
+        return wrapper
+
+    return deco
+
+
+def assume(condition):
+    """Real hypothesis discards the example; the replay set here is fixed
+    and benign, so a failed assumption just skips the remaining asserts."""
+    if not condition:
+        raise _AssumptionSkipped()
+
+
+class _AssumptionSkipped(Exception):
+    pass
+
+
+def install():
+    """Register this module as ``hypothesis`` in sys.modules."""
+    import sys
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.HealthCheck = types.SimpleNamespace(too_slow="too_slow",
+                                            data_too_large="data_too_large")
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "sampled_from", "booleans"):
+        setattr(st_mod, name, globals()[name])
+    mod.strategies = st_mod
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod

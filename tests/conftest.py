@@ -11,6 +11,16 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
+# The sandbox has no network: when the real hypothesis is absent, install the
+# deterministic replay shim so property tests still collect and run.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import _hypothesis_compat
+
+    _hypothesis_compat.install()
+
 
 def run_subprocess(code: str, devices: int = 8, timeout: int = 600):
     """Run python code in a subprocess with N fake host devices."""

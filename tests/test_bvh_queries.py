@@ -130,6 +130,79 @@ def test_property_bvh_equals_bruteforce(n, seed, radius, dim):
     assert np.array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_csr_zero_total_matches():
+    """All-miss predicates: empty CSR arrays, all-zero offsets — on both
+    indexes and on every engine route (`BVH._csr_pack` with total == 0)."""
+    from repro.core.engine import EngineConfig, QueryEngine
+    vals = _points(50, seed=50)
+    far = jnp.asarray(rng.uniform(10, 11, (6, 3)).astype(np.float32))
+    preds = P.intersects(G.Spheres(far, jnp.full((6,), 0.01, jnp.float32)))
+    for force in ("loop", "bruteforce", "pallas"):
+        eng = QueryEngine(EngineConfig(force=force))
+        v, idx, off = BVH(None, vals, engine=eng).query(None, preds)
+        assert idx.shape == (0,)
+        assert v.coords.shape == (0, 3)
+        assert np.array_equal(np.asarray(off), np.zeros(7, np.int32))
+    v, idx, off = BruteForce(None, vals).query(None, preds)
+    assert idx.shape == (0,)
+    assert np.array_equal(np.asarray(off), np.zeros(7, np.int32))
+
+
+def test_csr_capacity_clamping():
+    """counts > capacity: offsets cumsum the CLAMPED counts, every stored
+    slice is a subset of the true match set, counts stay unclamped."""
+    from repro.core.engine import EngineConfig, QueryEngine
+    vals = _points(60, seed=51)
+    preds = P.intersects(G.Spheres(vals.coords[:5], jnp.full((5,), 10.0)))
+    full = np.asarray(BruteForce(None, vals).count(None, preds))
+    assert (full == 60).all()
+    cap = 7
+    for force in ("loop", "bruteforce", "pallas"):
+        eng = QueryEngine(EngineConfig(force=force))
+        _, idx, off = BVH(None, vals, engine=eng).query(None, preds,
+                                                        capacity=cap)
+        off = np.asarray(off)
+        assert np.array_equal(off, np.arange(6) * cap)
+        idx = np.asarray(idx)
+        assert idx.shape == (5 * cap,)
+        for qi in range(5):
+            s = set(idx[off[qi]:off[qi + 1]].tolist())
+            assert len(s) == cap and s <= set(range(60))
+
+
+def test_csr_empty_predicate_batch():
+    """Q == 0: query must return empty CSR arrays, not crash sizing the
+    capacity from an empty counts reduction."""
+    vals = _points(50, seed=53)
+    preds = P.intersects(G.Spheres(jnp.zeros((0, 3), jnp.float32),
+                                   jnp.zeros((0,), jnp.float32)))
+    v, idx, off = BVH(None, vals).query(None, preds)
+    assert idx.shape == (0,)
+    assert np.array_equal(np.asarray(off), np.zeros(1, np.int32))
+    assert BVH(None, vals).count(None, preds).shape == (0,)
+
+
+def test_csr_degenerate_trees():
+    """N in {0, 1}: no LBVH exists; count/query/knn run the linear-scan
+    fallback and keep the CSR layout contract."""
+    q = _points(3, seed=52)
+    preds = P.intersects(G.Spheres(q.coords, jnp.full((3,), 10.0)))
+    for n in (0, 1):
+        vals = G.Points(jnp.zeros((n, 3), jnp.float32))
+        bvh = BVH(None, vals)
+        assert bvh.tree is None
+        c = np.asarray(bvh.count(None, preds))
+        assert (c == n).all()
+        _, idx, off = bvh.query(None, preds)
+        assert np.array_equal(np.asarray(off), np.arange(4) * n)
+        assert idx.shape == (3 * n,)
+        d, i = bvh.knn(None, P.nearest(q, k=2))
+        d, i = np.asarray(d), np.asarray(i)
+        assert (i[:, n:] == -1).all() and np.isinf(d[:, n:]).all()
+        if n == 1:
+            assert (i[:, 0] == 0).all() and np.isfinite(d[:, 0]).all()
+
+
 def test_early_exit_prunes_traversal():
     """§2.6 bullet 5: count_with_limit(1) must stop at the first match."""
     vals = _points(1000)

@@ -7,11 +7,11 @@ import pytest
 def test_distributed_knn_and_count(subproc):
     code = """
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
+from repro.compat import AxisType, make_mesh
 from repro.core.distributed import DistributedTree
 
 rng = np.random.default_rng(3)
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
 N, Q = 1024, 128
 pts = rng.uniform(0, 1, (N, 3)).astype(np.float32)
 qp = rng.uniform(0, 1, (Q, 3)).astype(np.float32)
@@ -34,11 +34,11 @@ print("DIST OK")
 def test_distributed_ray_nearest(subproc):
     code = """
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
+from repro.compat import AxisType, make_mesh
 from repro.core.distributed import DistributedTree
 
 rng = np.random.default_rng(4)
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
 N, R = 512, 64
 pts = rng.uniform(0, 1, (N, 3)).astype(np.float32)
 dt = DistributedTree(mesh, "data", jnp.asarray(pts))
@@ -61,12 +61,12 @@ def test_distributed_callback_monoid(subproc):
     """Callbacks run data-side; custom (non-psum) combine across shards."""
     code = """
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
+from repro.compat import AxisType, make_mesh
 from repro.core.distributed import DistributedTree
 from repro.core import geometry as G, predicates as P
 
 rng = np.random.default_rng(5)
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
 N, Q = 512, 64
 pts = rng.uniform(0, 1, (N, 3)).astype(np.float32)
 qp = rng.uniform(0, 1, (Q, 3)).astype(np.float32)

@@ -1,0 +1,234 @@
+"""QueryEngine dispatch + fused Pallas traversal kernel vs the BruteForce
+oracle (interpret mode on CPU — identical kernel-body semantics)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import geometry as G, predicates as P
+from repro.core.brute_force import BruteForce
+from repro.core.bvh import BVH
+from repro.core.engine import (ROUTE_BRUTEFORCE, ROUTE_LOOP, ROUTE_PALLAS,
+                               EngineConfig, QueryEngine)
+from repro.core.lbvh import build
+from repro.core.traversal import traverse
+from repro.core import callbacks as CB
+from repro.kernels.bvh_traverse import bvh_traverse_knn, bvh_traverse_spatial
+
+rng = np.random.default_rng(17)
+
+
+def _pts(n, dim=3, seed=0, lo=0.0, hi=1.0):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.uniform(lo, hi, (n, dim)).astype(np.float32))
+
+
+def _tree_arrays(tree):
+    return (tree.node_lo, tree.node_hi, tree.rope, tree.left_child,
+            tree.range_last, tree.leaf_perm)
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle: spatial
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,q,dim", [(64, 16, 2), (300, 40, 3), (513, 33, 5)])
+def test_pallas_spatial_sphere_counts_bit_exact(n, q, dim):
+    pts = _pts(n, dim, seed=n)
+    qp = _pts(q, dim, seed=1000 + n)
+    r = jnp.full((q,), 0.3, jnp.float32)
+    vals = G.Points(pts)
+    tree = build(G.Boxes(pts, pts))
+    cnt, _ = bvh_traverse_spatial(*_tree_arrays(tree), qp, qp, r,
+                                  capacity=1, fine_sqrt=True, interpret=True)
+    want = BruteForce(None, vals).count(
+        None, P.intersects(G.Spheres(qp, r)))
+    assert np.array_equal(np.asarray(cnt), np.asarray(want))
+
+
+@pytest.mark.parametrize("kind", ["point", "box", "sphere"])
+def test_pallas_spatial_all_query_kinds_vs_oracle(kind):
+    """Counts AND match sets identical to BruteForce for every query kind
+    the unified (q_lo, q_hi, r²) representation covers — over Boxes values."""
+    r0 = np.random.default_rng(3)
+    lo = jnp.asarray(r0.uniform(0, 1, (200, 3)).astype(np.float32))
+    boxes = G.Boxes(lo, lo + jnp.asarray(
+        r0.uniform(0.01, 0.2, (200, 3)).astype(np.float32)))
+    q = 48
+    qp = _pts(q, 3, seed=4)
+    if kind == "point":
+        preds = P.intersects(G.Points(qp))
+        q_lo, q_hi, rad = qp, qp, jnp.zeros((q,), jnp.float32)
+    elif kind == "box":
+        preds = P.intersects(G.Boxes(qp, qp + 0.25))
+        q_lo, q_hi, rad = qp, qp + 0.25, jnp.zeros((q,), jnp.float32)
+    else:
+        rad = jnp.full((q,), 0.2, jnp.float32)
+        preds = P.intersects(G.Spheres(qp, rad))
+        q_lo, q_hi = qp, qp
+    tree = build(boxes)
+    bf = BruteForce(None, boxes)
+    want = np.asarray(bf.count(None, preds))
+    cap = max(int(want.max()), 1)
+    cnt, buf = bvh_traverse_spatial(*_tree_arrays(tree), q_lo, q_hi, rad,
+                                    capacity=cap, interpret=True)
+    assert np.array_equal(np.asarray(cnt), want)
+    _, ib, ob = bf.query(None, preds)
+    ib, ob = np.asarray(ib), np.asarray(ob)
+    buf = np.asarray(buf)
+    for i in range(q):
+        assert set(buf[i, :want[i]].tolist()) == set(ib[ob[i]:ob[i + 1]].tolist())
+
+
+def test_pallas_spatial_capacity_clamps_but_counts_full():
+    pts = _pts(400, 3, seed=9)
+    qp = _pts(32, 3, seed=10)
+    r = jnp.full((32,), 0.4, jnp.float32)
+    tree = build(G.Boxes(pts, pts))
+    cnt_full, _ = bvh_traverse_spatial(*_tree_arrays(tree), qp, qp, r,
+                                       capacity=1, fine_sqrt=True,
+                                       interpret=True)
+    cnt, buf = bvh_traverse_spatial(*_tree_arrays(tree), qp, qp, r,
+                                    capacity=5, fine_sqrt=True,
+                                    interpret=True)
+    assert np.array_equal(np.asarray(cnt), np.asarray(cnt_full))
+    buf = np.asarray(buf)
+    stored = (buf >= 0).sum(1)
+    assert np.array_equal(stored, np.minimum(np.asarray(cnt), 5))
+
+
+def test_pallas_spatial_min_pos_matches_loop_pair_traversal():
+    """The range_last position filter (§2.6 pair traversal) must prune the
+    same subtrees as the while-loop implementation."""
+    pts = _pts(128, 3, seed=11)
+    tree = build(G.Boxes(pts, pts))
+    vals = G.Points(pts)
+    # self-join: every point queries a sphere around itself
+    r = jnp.full((128,), 0.25, jnp.float32)
+    preds = P.intersects(G.Spheres(pts, r))
+    # min_pos = own sorted position -> strict upper-triangle join
+    inv_perm = jnp.zeros((128,), jnp.int32).at[tree.leaf_perm].set(
+        jnp.arange(128, dtype=jnp.int32))
+    cb, s0 = CB.counting()
+    s0 = jnp.broadcast_to(s0, (128,))
+    want = traverse(tree, vals, preds, cb, s0, min_pos=inv_perm)
+    cnt, _ = bvh_traverse_spatial(*_tree_arrays(tree), pts, pts, r,
+                                  capacity=1, fine_sqrt=True,
+                                  min_pos=inv_perm, interpret=True)
+    assert np.array_equal(np.asarray(cnt), np.asarray(want))
+    # upper-triangle invariant: sum == (total pairs - Q self matches) / 2
+    full = BruteForce(None, vals).count(None, preds)
+    assert int(np.asarray(cnt).sum()) == (int(np.asarray(full).sum()) - 128) // 2
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle: kNN
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,q,dim,k", [(64, 16, 2, 1), (500, 64, 3, 8),
+                                       (513, 33, 5, 4), (100, 8, 3, 17)])
+def test_pallas_knn_vs_oracle(n, q, dim, k):
+    pts = _pts(n, dim, seed=n + 1)
+    qp = _pts(q, dim, seed=2000 + n)
+    tree = build(G.Boxes(pts, pts))
+    d1, i1 = bvh_traverse_knn(tree.node_lo, tree.node_hi, tree.rope,
+                              tree.left_child, tree.leaf_perm, qp, k=k,
+                              interpret=True)
+    d2, i2 = BruteForce(None, G.Points(pts)).knn(
+        None, P.nearest(G.Points(qp), k=k))
+    assert np.allclose(np.asarray(d1), np.asarray(d2), atol=1e-4)
+    # indices may differ only across exact-distance ties
+    same = np.asarray(i1) == np.asarray(i2)
+    if not same.all():
+        assert np.allclose(np.asarray(d1)[~same], np.asarray(d2)[~same],
+                           atol=1e-5)
+
+
+def test_pallas_knn_k_exceeds_n_pads_with_inf():
+    pts = _pts(8, 3, seed=5)
+    tree = build(G.Boxes(pts, pts))
+    d, i = bvh_traverse_knn(tree.node_lo, tree.node_hi, tree.rope,
+                            tree.left_child, tree.leaf_perm,
+                            _pts(4, 3, seed=6), k=12, interpret=True)
+    d, i = np.asarray(d), np.asarray(i)
+    assert (i[:, :8] >= 0).all() and (i[:, 8:] == -1).all()
+    assert np.isinf(d[:, 8:]).all()
+    assert (np.diff(d[:, :8], axis=1) >= 0).all()      # sorted ascending
+
+
+# ---------------------------------------------------------------------------
+# engine routing
+# ---------------------------------------------------------------------------
+
+def _mk(n=600, engine=None):
+    return BVH(None, G.Points(_pts(n, 3, seed=42)), engine=engine)
+
+
+def test_route_small_work_goes_bruteforce():
+    eng = QueryEngine(EngineConfig(brute_force_max_work=1 << 22))
+    bvh = _mk(600, eng)
+    preds = P.intersects(G.Spheres(_pts(10, 3, seed=1), jnp.full((10,), 0.1)))
+    assert eng.route_spatial(bvh, preds) == ROUTE_BRUTEFORCE
+
+
+def test_route_large_batch_goes_pallas():
+    eng = QueryEngine(EngineConfig(brute_force_max_work=100,
+                                   pallas_min_queries=8, pallas_min_leaves=8))
+    bvh = _mk(600, eng)
+    preds = P.intersects(G.Spheres(_pts(64, 3, seed=1), jnp.full((64,), 0.1)))
+    assert eng.route_spatial(bvh, preds) == ROUTE_PALLAS
+    knn = P.nearest(G.Points(_pts(64, 3, seed=2)), k=4)
+    assert eng.route_knn(bvh, knn) == ROUTE_PALLAS
+
+
+def test_route_ineligible_values_fall_back_to_loop():
+    """Triangles' fine test is not a box test -> never the fused kernel."""
+    r = np.random.default_rng(2)
+    a = jnp.asarray(r.uniform(0, 1, (64, 3)).astype(np.float32))
+    tris = G.Triangles(a, a + 0.05, a + 0.1)
+    eng = QueryEngine(EngineConfig(brute_force_max_work=0,
+                                   pallas_min_queries=1, pallas_min_leaves=1))
+    bvh = BVH(None, tris, engine=eng)
+    preds = P.intersects(G.Spheres(_pts(32, 3, seed=3), jnp.full((32,), 0.2)))
+    assert eng.route_spatial(bvh, preds) == ROUTE_LOOP
+
+
+def test_route_ray_predicates_always_loop():
+    eng = QueryEngine(EngineConfig(brute_force_max_work=1 << 30))
+    bvh = _mk(600, eng)
+    rays = P.RayNearest(G.Rays(_pts(8, 3, seed=4), _pts(8, 3, seed=5)), 1)
+    assert eng.route_spatial(bvh, rays) == ROUTE_LOOP
+
+
+def test_route_force_override():
+    for force in (ROUTE_BRUTEFORCE, ROUTE_PALLAS, ROUTE_LOOP):
+        eng = QueryEngine(EngineConfig(force=force))
+        bvh = _mk(600, eng)
+        preds = P.intersects(G.Spheres(_pts(16, 3, seed=6),
+                                       jnp.full((16,), 0.1)))
+        assert eng.route_spatial(bvh, preds) == force
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: BVH results are identical on every route
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("force", [ROUTE_LOOP, ROUTE_BRUTEFORCE, ROUTE_PALLAS])
+def test_bvh_query_results_path_independent(force):
+    vals = G.Points(_pts(300, 3, seed=7))
+    preds = P.intersects(G.Spheres(_pts(24, 3, seed=8),
+                                   jnp.full((24,), 0.25, jnp.float32)))
+    ref_bvh = BVH(None, vals, engine=QueryEngine(EngineConfig(force=ROUTE_LOOP)))
+    bvh = BVH(None, vals, engine=QueryEngine(EngineConfig(force=force)))
+    assert np.array_equal(np.asarray(bvh.count(None, preds)),
+                          np.asarray(ref_bvh.count(None, preds)))
+    _, ia, oa = bvh.query(None, preds)
+    _, ib, ob = ref_bvh.query(None, preds)
+    assert np.array_equal(np.asarray(oa), np.asarray(ob))
+    ia, ib, oa = np.asarray(ia), np.asarray(ib), np.asarray(oa)
+    for i in range(24):
+        assert set(ia[oa[i]:oa[i + 1]].tolist()) == set(ib[oa[i]:oa[i + 1]].tolist())
+
+    knn = P.nearest(G.Points(_pts(24, 3, seed=9)), k=5)
+    da, _ = bvh.knn(None, knn)
+    db, _ = ref_bvh.knn(None, knn)
+    assert np.allclose(np.asarray(da), np.asarray(db), atol=1e-4)

@@ -79,10 +79,11 @@ def test_hloanalysis_counts_collectives_in_loops(subproc):
     """A psum inside a scan must be charged x trip count."""
     code = """
 import jax, jax.numpy as jnp
-from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.compat import AxisType, make_mesh
 from repro.launch.hloanalysis import analyze
 
-mesh = jax.make_mesh((8,), ("d",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((8,), ("d",), axis_types=(AxisType.Auto,))
 
 def f(x, ws):
     def body(c, w):

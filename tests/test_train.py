@@ -97,16 +97,17 @@ def test_checkpoint_elastic_restore_resharding(subproc):
     device_put with the target NamedSharding does the resharding."""
     code = """
 import jax, jax.numpy as jnp, numpy as np, tempfile, os
-from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.compat import AxisType, make_mesh
 from repro.checkpoint import save_checkpoint, load_checkpoint
 
-mesh1 = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh1 = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
 x = jnp.arange(64.0).reshape(8, 8)
 xs = jax.device_put(x, NamedSharding(mesh1, P("data", None)))
 td = tempfile.mkdtemp()
 save_checkpoint(td, 7, {"x": xs})
 
-mesh2 = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh2 = make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
 sh = {"x": NamedSharding(mesh2, P("data", "model"))}
 step, tree, _ = load_checkpoint(td, shardings=sh)
 assert step == 7
