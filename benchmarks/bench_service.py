@@ -1,0 +1,82 @@
+"""Service-path benchmarks (DESIGN.md §5): index refresh + bucketed serving.
+
+Rows (CSV, relative CPU timings like every other bench):
+  * build vs refit at N=1e5 — the refit claim is >= 5x: refit skips the
+    Morton sort and both Karras searches, leaving one RMQ pass;
+  * per-bucket query latency for the warmed service at each power-of-two
+    bucket (knn / within / ray).
+
+``main`` returns a dict; ``run.py`` persists it as BENCH_service.json so
+the perf trajectory of the serving layer is recorded run over run.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import geometry as G
+from repro.core.lbvh import build, refit
+from repro.service import (QueryServer, ServiceConfig, knn_request,
+                           ray_request, within_request)
+
+from ._util import row, timeit
+
+N_REFIT = 100_000
+N_SERVE = 20_000
+BUCKETS = (8, 32, 128)
+
+
+def _bench_refresh(results):
+    rng = np.random.default_rng(0)
+    pts = rng.uniform(0, 1, (N_REFIT, 3)).astype(np.float32)
+    moved = pts + rng.normal(0, 0.01, pts.shape).astype(np.float32)
+    boxes = G.Boxes(jnp.asarray(pts), jnp.asarray(pts))
+    boxes2 = G.Boxes(jnp.asarray(moved), jnp.asarray(moved))
+
+    tree = build(boxes)
+    t_build = timeit(build, boxes2)
+    t_refit = timeit(refit, tree, boxes2)
+    row(f"service_build_n{N_REFIT}", t_build)
+    row(f"service_refit_n{N_REFIT}", t_refit,
+        derived=f"{t_build / t_refit:.1f}x_vs_build")
+    results["build_us"] = t_build
+    results["refit_us"] = t_refit
+    results["refit_speedup"] = t_build / t_refit
+
+
+def _bench_buckets(results):
+    rng = np.random.default_rng(1)
+    srv = QueryServer(config=ServiceConfig(capacity=32))
+    srv.create_index("default", G.Points(jnp.asarray(
+        rng.uniform(0, 1, (N_SERVE, 3)).astype(np.float32))))
+    srv.warmup("default", [("knn", 8), ("within", 0), ("ray", 1)],
+               max_bucket=max(BUCKETS), dim=3)
+
+    per_bucket = {}
+    for b in BUCKETS:
+        q = rng.uniform(0, 1, (b, 3)).astype(np.float32)
+        d = rng.normal(size=(b, 3)).astype(np.float32)
+        lat = {}
+        for name, req in (("knn", knn_request(q, k=8)),
+                          ("within", within_request(q, 0.05)),
+                          ("ray", ray_request(q, d))):
+            us = timeit(lambda r=req: srv.handle([r]))
+            route = srv.handle([req])[0].stats.route
+            row(f"service_{name}_bucket{b}", us, derived=route)
+            lat[name] = {"us": us, "route": route}
+        per_bucket[str(b)] = lat
+    results["bucket_latency"] = per_bucket
+    s = srv.engine.stats
+    results["executable_cache"] = {"hits": s.cache_hits,
+                                   "misses": s.cache_misses,
+                                   "jit_traces": s.jit_traces}
+
+
+def main():
+    results = {"n_refit": N_REFIT, "n_serve": N_SERVE}
+    _bench_refresh(results)
+    _bench_buckets(results)
+    return results
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    print(main())

@@ -1,9 +1,19 @@
 """Benchmark driver: one module per paper table/claim. Prints
 ``name,us_per_call,derived`` CSV rows (CPU timings are relative;
-TPU-derived numbers come from the dry-run roofline — EXPERIMENTS.md)."""
+TPU-derived numbers come from the dry-run roofline — EXPERIMENTS.md).
+
+A module's ``main`` may return a dict of structured results; it is then
+persisted to ``BENCH_<suffix>.json`` at the repo root (e.g.
+``bench_service`` -> ``BENCH_service.json``) so perf trajectories are
+recorded run over run, not just printed.
+"""
 import importlib
+import json
+import os
 import sys
 import traceback
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 MODULES = [
     "bench_construction",   # §2.6 morton 32/64 + build variants
@@ -16,6 +26,7 @@ MODULES = [
     "bench_raytracing",     # §2.5 three predicates
     "bench_mls",            # §1 interpolation
     "bench_distributed",    # §2.3 callback comm saving + weak scaling
+    "bench_service",        # DESIGN.md §5 refit + bucketed serving
 ]
 
 
@@ -27,7 +38,13 @@ def main():
         if only and name not in only:
             continue
         try:
-            importlib.import_module(f"benchmarks.{name}").main()
+            out = importlib.import_module(f"benchmarks.{name}").main()
+            if isinstance(out, dict):
+                path = os.path.join(
+                    REPO, f"BENCH_{name.removeprefix('bench_')}.json")
+                with open(path, "w") as f:
+                    json.dump(out, f, indent=2, sort_keys=True)
+                print(f"# wrote {os.path.basename(path)}", file=sys.stderr)
         except Exception:
             failed.append(name)
             traceback.print_exc()

@@ -5,5 +5,13 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# lint first (fast): config lives in pyproject.toml [tool.ruff]. The CI
+# sandbox has no network, so tolerate an absent ruff instead of failing.
+if command -v ruff >/dev/null 2>&1; then
+    ruff check .
+else
+    echo "tier1: ruff not installed, skipping lint" >&2
+fi
+
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 exec python -m pytest -q -p no:cacheprovider "$@"

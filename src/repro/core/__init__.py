@@ -8,12 +8,13 @@ from .distributed import DistributedTree
 from .engine import EngineConfig, QueryEngine, default_engine, set_default_engine
 from .emst import emst
 from .interpolation import mls_interpolate
-from .lbvh import LBVH, build
+from .lbvh import LBVH, build, refit, sah_cost
 from .predicates import intersects, nearest
 from .raytracing import cast_intersect, cast_nearest, cast_ordered
 
 __all__ = [
-    "BVH", "BruteForce", "DistributedTree", "LBVH", "build",
+    "BVH", "BruteForce", "DistributedTree", "LBVH", "build", "refit",
+    "sah_cost",
     "QueryEngine", "EngineConfig", "default_engine", "set_default_engine",
     "intersects", "nearest", "dbscan", "emst", "mls_interpolate",
     "cast_nearest", "cast_intersect", "cast_ordered",

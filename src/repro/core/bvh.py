@@ -33,12 +33,46 @@ from . import predicates as P
 from . import traversal as T
 from .access import as_geometry, default_indexable_getter
 
-__all__ = ["BVH"]
+__all__ = ["BVH", "QueryResult"]
+
+
+class QueryResult(tuple):
+    """The storage query's ``(values, indices, offsets)`` triple.
+
+    Unpacks like a plain 3-tuple (the API-v1-compatible spelling) but also
+    carries ``overflow``: True when a caller-supplied capacity was exceeded
+    even after the doubling retries, i.e. the CSR result is truncated.
+    """
+
+    def __new__(cls, triple, overflow: bool = False):
+        obj = super().__new__(cls, triple)
+        obj.overflow = overflow
+        return obj
 
 
 class BVH:
     def __init__(self, space, values, indexable_getter=default_indexable_getter,
                  *, bits: int = 64, refit: str = "rmq", engine=None):
+        self._init_common(space, values, indexable_getter, engine)
+        if self._n >= 2:
+            self.tree = lbvh.build(self._boxes, bits=bits, refit=refit)
+            if space is not None:
+                self.tree = jax.device_put(self.tree, space)
+        else:
+            self.tree = None  # degenerate; queries fall back to linear scan
+
+    @classmethod
+    def from_tree(cls, space, values, tree,
+                  indexable_getter=default_indexable_getter, *, engine=None):
+        """Wrap an existing LBVH over (possibly moved) values without
+        rebuilding — the swap-in constructor for ``lbvh.refit`` output.
+        The caller guarantees `tree` bounds `indexable_getter(values)`."""
+        obj = cls.__new__(cls)
+        obj._init_common(space, values, indexable_getter, engine)
+        obj.tree = tree if space is None else jax.device_put(tree, space)
+        return obj
+
+    def _init_common(self, space, values, indexable_getter, engine):
         self.space = space
         self.values = values
         self._getter = indexable_getter
@@ -52,13 +86,6 @@ class BVH:
             indexable_getter is default_indexable_getter
             and isinstance(values, (G.Points, G.Boxes)))
         self._bf = None
-        if self._n >= 2:
-            device = space if space is not None else None
-            self.tree = lbvh.build(boxes, bits=bits, refit=refit)
-            if device is not None:
-                self.tree = jax.device_put(self.tree, device)
-        else:
-            self.tree = None  # degenerate; queries fall back to linear scan
 
     def _brute(self):
         """Lazy MXU-path sibling index over the same values (engine route)."""
@@ -89,30 +116,50 @@ class BVH:
         return T.traverse(self.tree, self.values, predicates, callback, init_state)
 
     # --- query flavor (3): storage query (CSR) ---------------------------
-    def query(self, space, predicates, capacity: int | None = None):
-        """Returns (values_out, indices, offsets) in CSR layout.
+    def query(self, space, predicates, capacity: int | None = None, *,
+              max_doublings: int = 6):
+        """Returns QueryResult (values_out, indices, offsets) in CSR layout.
 
         Two-pass: count -> exclusive scan -> fill, the same structure ArborX
         uses internally. If `capacity` (max matches per query) is given the
-        whole query is jit-compatible; otherwise a host sync sizes buffers.
+        *fill* is jit-compatible at that width; when the guess is low the
+        buffer is re-filled at doubled capacity (up to `max_doublings`
+        times) instead of silently truncating. ``result.overflow`` is True
+        iff truncation remains after the capped retries.
         """
         nq = len(predicates)
+        overflow = False
         if capacity is None:
             if (self.tree is not None
                     and self._engine.route_spatial(self, predicates)
                     == E.ROUTE_BRUTEFORCE):
                 # unclamped + brute-force route: one-pass CSR (the two-pass
                 # count->fill would run the (Q, N) match matrix twice)
-                return self._brute().query(space, predicates)
+                return QueryResult(self._brute().query(space, predicates))
             counts = self.count(space, predicates)
             capacity = max(int(counts.max()), 1) if nq else 1
-        counts, idx_buf = self._fill(predicates, capacity)
+            counts, idx_buf = self._fill(predicates, capacity)
+        else:
+            counts, idx_buf = self._fill(predicates, capacity)
+            # counts are FULL counts (the fill pass only clamps the buffer),
+            # so one host sync decides the retry capacity outright
+            needed = int(counts.max()) if nq else 0
+            if needed > capacity:
+                retry = capacity
+                for _ in range(max_doublings):
+                    if retry >= needed:
+                        break
+                    retry *= 2
+                if retry > capacity:
+                    counts, idx_buf = self._fill(predicates, retry)
+                    capacity = retry
+                overflow = needed > capacity
         offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
                                    jnp.cumsum(jnp.minimum(counts, capacity))]).astype(jnp.int32)
         total = int(offsets[-1])
         flat_idx = _csr_pack(idx_buf, jnp.minimum(counts, capacity), offsets, total)
         values_out = T.value_at(self.values, flat_idx)
-        return values_out, flat_idx, offsets
+        return QueryResult((values_out, flat_idx, offsets), overflow)
 
     # --- query flavor (2): callback with output --------------------------
     def query_out(self, space, predicates, out_fn, capacity: int | None = None):

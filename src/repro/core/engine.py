@@ -24,8 +24,10 @@ it never traces into jit. Crossover constants are measured by
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import os
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -34,9 +36,9 @@ from ..kernels.bvh_traverse import bvh_traverse_knn, bvh_traverse_spatial
 from . import geometry as G
 from . import predicates as P
 
-__all__ = ["EngineConfig", "QueryEngine", "default_engine",
-           "set_default_engine", "ROUTE_BRUTEFORCE", "ROUTE_PALLAS",
-           "ROUTE_LOOP"]
+__all__ = ["EngineConfig", "EngineStats", "ExecInfo", "QueryEngine",
+           "default_engine", "set_default_engine", "ROUTE_BRUTEFORCE",
+           "ROUTE_PALLAS", "ROUTE_LOOP"]
 
 ROUTE_BRUTEFORCE = "bruteforce"
 ROUTE_PALLAS = "pallas"
@@ -56,6 +58,9 @@ class EngineConfig:
         (~16 MB/core); stay on the while-loop path.
     pallas_max_capacity: fill/kNN buffers wider than this per query would
         blow the kernel's VMEM output block; stay off the pallas path.
+    max_executables: LRU bound on the exec_* executable cache — a long-
+        lived service whose leaf count changes across rebuilds must not
+        pin one compiled executable per historical N forever.
     use_pallas: master switch for the fused kernel path.
     force: route every eligible query to one path ("bruteforce" |
         "pallas" | "loop"); queries the forced path cannot express fall
@@ -68,6 +73,7 @@ class EngineConfig:
     pallas_max_capacity: int = 4096
     use_pallas: bool = True
     force: str | None = None
+    max_executables: int = 256
 
     def __post_init__(self):
         routes = (ROUTE_BRUTEFORCE, ROUTE_PALLAS, ROUTE_LOOP)
@@ -79,6 +85,20 @@ class EngineConfig:
                 raise ValueError(
                     f"REPRO_ENGINE_FORCE={env!r} is not one of {routes}")
             self.force = env
+
+
+def _pallas_spatial_call(tree, q_lo, q_hi, r, *, capacity, fine_sqrt):
+    """The ONE spelling of the fused spatial kernel call, shared by the
+    direct route (pallas_fill) and the cached service executables."""
+    return bvh_traverse_spatial(
+        tree.node_lo, tree.node_hi, tree.rope, tree.left_child,
+        tree.range_last, tree.leaf_perm, q_lo, q_hi, r,
+        capacity=capacity, fine_sqrt=fine_sqrt)
+
+
+def _pallas_knn_call(tree, qc, *, k):
+    return bvh_traverse_knn(tree.node_lo, tree.node_hi, tree.rope,
+                            tree.left_child, tree.leaf_perm, qc, k=k)
 
 
 def _spatial_rep(predicates):
@@ -98,11 +118,39 @@ def _spatial_rep(predicates):
     return None
 
 
+@dataclasses.dataclass
+class EngineStats:
+    """Executable-cache accounting (DESIGN.md §5).
+
+    cache_hits/misses count lookups of the per-(route, op, bucket shape)
+    executable cache; jit_traces counts ACTUAL retraces — each cached body
+    bumps it from inside the traced Python, so it moves only when XLA
+    recompiles. A warm service shows hits growing and misses/traces flat.
+    """
+    cache_hits: int = 0
+    cache_misses: int = 0
+    jit_traces: int = 0
+
+    def snapshot(self) -> "EngineStats":
+        return dataclasses.replace(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecInfo:
+    """Per-dispatch metadata returned by the exec_* entry points."""
+    route: str
+    cache_hit: bool
+
+
 class QueryEngine:
     """Dispatches batched BVH queries to bruteforce / pallas / loop."""
 
     def __init__(self, config: EngineConfig | None = None):
         self.config = config or EngineConfig()
+        self.stats = EngineStats()
+        self._executables: collections.OrderedDict[tuple, object] = \
+            collections.OrderedDict()
+        self._cache_lock = threading.Lock()
 
     # -- routing ----------------------------------------------------------
     def route_spatial(self, bvh, predicates, capacity: int | None = None) -> str:
@@ -154,23 +202,18 @@ class QueryEngine:
         """(counts, idx_buf): the ``collect_hits`` contract — full counts
         plus the first `capacity` matched indices in traversal order."""
         q_lo, q_hi, r = _spatial_rep(predicates)
-        t = bvh.tree
         # Points values take the sqrt-form fine test (distance <= r), the
         # bit-exact twin of predicates.leaf_match_test for them
-        fine_sqrt = isinstance(bvh.values, G.Points)
-        return bvh_traverse_spatial(
-            t.node_lo, t.node_hi, t.rope, t.left_child, t.range_last,
-            t.leaf_perm, q_lo, q_hi, r, capacity=capacity,
-            fine_sqrt=fine_sqrt)
+        return _pallas_spatial_call(bvh.tree, q_lo, q_hi, r,
+                                    capacity=capacity,
+                                    fine_sqrt=isinstance(bvh.values, G.Points))
 
     def pallas_knn(self, bvh, predicates):
         """(dists, idxs) (Q, k) via the fused kernel. Query point is the
         geometry centroid — exactly what ``predicates.leaf_distance``
         measures fine distances from."""
-        t = bvh.tree
-        qc = G.centroid(predicates.geom)
-        return bvh_traverse_knn(t.node_lo, t.node_hi, t.rope, t.left_child,
-                                t.leaf_perm, qc, k=predicates.k)
+        return _pallas_knn_call(bvh.tree, G.centroid(predicates.geom),
+                                k=predicates.k)
 
     # -- brute-force fill (index-ordered; sets match traversal order) -----
     def bruteforce_fill(self, brute, predicates, capacity: int):
@@ -181,6 +224,154 @@ class QueryEngine:
         first = jax.lax.sort(key, dimension=1)[:, :capacity]
         buf = jnp.where(first < n, first, -1).astype(jnp.int32)
         return counts, buf
+
+    # -- executable cache (DESIGN.md §5) -----------------------------------
+    #
+    # The service dispatches every micro-batch through these entry points.
+    # Each (route, op, bucket shape) gets its own jitted executable whose
+    # only inputs are arrays (tree pytree, values pytree, query arrays) —
+    # nothing device-resident is closed over, so a refit/rebuild of the same
+    # N reuses the warm executable with the new arrays. The traced bodies
+    # bump ``stats.jit_traces`` so tests can assert zero recompiles after
+    # warmup.
+
+    def _cached(self, key, make):
+        # locked: concurrent server threads must not compile the same key
+        # twice or lose stats increments (IndexStore promises this level of
+        # thread-safety; the cache has to match it)
+        with self._cache_lock:
+            fn = self._executables.get(key)
+            hit = fn is not None
+            if hit:
+                self.stats.cache_hits += 1
+                self._executables.move_to_end(key)
+            else:
+                self.stats.cache_misses += 1
+                fn = self._executables[key] = make()
+                while len(self._executables) > self.config.max_executables:
+                    self._executables.popitem(last=False)  # LRU eviction
+        return fn, hit
+
+    def _shape_key(self, bvh, predicates):
+        if bvh.tree is None:
+            raise ValueError("engine exec_* paths require an index with "
+                             "N >= 2 (degenerate N handled by BVH directly)")
+        geom = getattr(predicates, "geom", None)
+        geom = geom if geom is not None else predicates.rays
+        # the getter is part of the key: bodies close over it, and two
+        # same-shaped indexes with different getters must not share one
+        return (type(predicates).__name__, type(geom).__name__,
+                type(bvh.values).__name__, len(predicates), bvh.size(),
+                bvh._boxes.dim, bvh._getter)
+
+    def exec_spatial(self, bvh, predicates, capacity: int):
+        """Cached count+fill for an Intersects bucket.
+
+        Returns ((counts, idx_buf), ExecInfo): FULL per-query counts plus the
+        first `capacity` matched original indices per query (-1 padded).
+        """
+        route = self.route_spatial(bvh, predicates, capacity)
+        key = (route, "spatial", capacity) + self._shape_key(bvh, predicates)
+        nq = len(predicates)
+
+        if route == ROUTE_PALLAS:
+            fine_sqrt = isinstance(bvh.values, G.Points)
+
+            def make():
+                def body(tree, q_lo, q_hi, r):
+                    self.stats.jit_traces += 1
+                    return _pallas_spatial_call(tree, q_lo, q_hi, r,
+                                                capacity=capacity,
+                                                fine_sqrt=fine_sqrt)
+                return jax.jit(body)
+
+            fn, hit = self._cached(key, make)
+            q_lo, q_hi, r = _spatial_rep(predicates)
+            return fn(bvh.tree, q_lo, q_hi, r), ExecInfo(route, hit)
+
+        if route == ROUTE_BRUTEFORCE:
+            getter = bvh._getter
+
+            def make():
+                def body(values, preds):
+                    self.stats.jit_traces += 1
+                    from .brute_force import BruteForce
+                    return self.bruteforce_fill(
+                        BruteForce(None, values, getter), preds, capacity)
+                return jax.jit(body)
+
+            fn, hit = self._cached(key, make)
+            return fn(bvh.values, predicates), ExecInfo(route, hit)
+
+        def make():
+            def body(tree, values, preds):
+                self.stats.jit_traces += 1
+                from . import callbacks as CB
+                from . import traversal as T
+                cb, s0 = CB.collect_hits(capacity)
+                s0 = jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(a, (nq,) + jnp.shape(a)), s0)
+                count, idxs, _ = T.traverse(tree, values, preds, cb, s0)
+                return count, idxs
+            return jax.jit(body)
+
+        fn, hit = self._cached(key, make)
+        return fn(bvh.tree, bvh.values, predicates), ExecInfo(ROUTE_LOOP, hit)
+
+    def exec_knn(self, bvh, predicates):
+        """Cached kNN for a Nearest bucket. Returns ((dists, idxs), ExecInfo)."""
+        route = self.route_knn(bvh, predicates)
+        k = predicates.k
+        key = (route, "knn", k) + self._shape_key(bvh, predicates)
+
+        if route == ROUTE_PALLAS:
+            def make():
+                def body(tree, qc):
+                    self.stats.jit_traces += 1
+                    return _pallas_knn_call(tree, qc, k=k)
+                return jax.jit(body)
+
+            fn, hit = self._cached(key, make)
+            return fn(bvh.tree, G.centroid(predicates.geom)), ExecInfo(route, hit)
+
+        if route == ROUTE_BRUTEFORCE:
+            getter = bvh._getter
+
+            def make():
+                def body(values, preds):
+                    self.stats.jit_traces += 1
+                    from .brute_force import BruteForce
+                    return BruteForce(None, values, getter).knn(None, preds)
+                return jax.jit(body)
+
+            fn, hit = self._cached(key, make)
+            return fn(bvh.values, predicates), ExecInfo(route, hit)
+
+        def make():
+            def body(tree, values, preds):
+                self.stats.jit_traces += 1
+                from . import traversal as T
+                return T.traverse_knn(tree, values, preds, k)
+            return jax.jit(body)
+
+        fn, hit = self._cached(key, make)
+        return fn(bvh.tree, bvh.values, predicates), ExecInfo(ROUTE_LOOP, hit)
+
+    def exec_ray_nearest(self, bvh, rays, k: int):
+        """Cached first-k ray hits (always the general loop path).
+        Returns ((t, idx), ExecInfo) with (Q, k) arrays padded (inf, -1)."""
+        preds = P.RayNearest(rays, k)
+        key = (ROUTE_LOOP, "ray_nearest", k) + self._shape_key(bvh, preds)
+
+        def make():
+            def body(tree, values, rays_):
+                self.stats.jit_traces += 1
+                from . import traversal as T
+                return T.traverse_knn(tree, values, P.RayNearest(rays_, k), k)
+            return jax.jit(body)
+
+        fn, hit = self._cached(key, make)
+        return fn(bvh.tree, bvh.values, rays), ExecInfo(ROUTE_LOOP, hit)
 
 
 _DEFAULT = QueryEngine()

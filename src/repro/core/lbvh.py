@@ -33,7 +33,7 @@ import jax.numpy as jnp
 from . import morton as M
 from .geometry import Boxes
 
-__all__ = ["LBVH", "build"]
+__all__ = ["LBVH", "build", "refit", "sah_cost"]
 
 SENTINEL = jnp.int32(-1)
 
@@ -60,6 +60,9 @@ class LBVH:
     rope: jax.Array         # (2N-1,) int32 escape pointers (stackless, -1 = done)
     range_last: jax.Array   # (2N-1,) int32 last sorted-leaf position in subtree
     leaf_perm: jax.Array    # (N,) int32: sorted leaf position -> original index
+    range_first: jax.Array  # (N-1,) int32 first sorted-leaf position per
+                            # internal node — kept so ``refit`` can re-run the
+                            # RMQ AABB pass without redoing the Karras search
 
     @property
     def num_leaves(self):
@@ -127,33 +130,30 @@ def _karras_ranges(hi, lo, idx, n: int, max_log2: int):
 
 
 def _refit_rmq(leaf_lo, leaf_hi, first, last, max_log2: int):
-    """Internal AABBs via range-min/max sparse tables over sorted leaf boxes.
+    """Internal AABBs via a range-min sparse table over sorted leaf boxes.
 
     Beyond-paper TPU optimization: replaces ArborX's atomic-gated bottom-up
-    refit with two O(N log N) prefix tables + one gather per node.
+    refit with one O(N log N) prefix table + one gather per node. The hi
+    bound rides in the same table negated (max(x) == -min(-x), exact in
+    IEEE), halving the table-build passes — this is also the whole of
+    ``refit``'s work between time steps, so it is the serving hot path.
     """
-    n = leaf_lo.shape[0]
-    levels_lo = [leaf_lo]
-    levels_hi = [leaf_hi]
+    dim = leaf_lo.shape[1]
+    key = jnp.concatenate([leaf_lo, -leaf_hi], axis=1)    # (N, 2*dim)
+    levels = [key]
     for k in range(1, max_log2 + 1):
         h = 1 << (k - 1)
-        prev_lo, prev_hi = levels_lo[-1], levels_hi[-1]
-        # min(prev[i], prev[i+h]) with +inf/-inf padding past the end
-        pad_lo = jnp.full((h, leaf_lo.shape[1]), jnp.inf, leaf_lo.dtype)
-        pad_hi = jnp.full((h, leaf_hi.shape[1]), -jnp.inf, leaf_hi.dtype)
-        shift_lo = jnp.concatenate([prev_lo[h:], pad_lo], 0)
-        shift_hi = jnp.concatenate([prev_hi[h:], pad_hi], 0)
-        levels_lo.append(jnp.minimum(prev_lo, shift_lo))
-        levels_hi.append(jnp.maximum(prev_hi, shift_hi))
-    tbl_lo = jnp.stack(levels_lo)   # (L, N, dim)
-    tbl_hi = jnp.stack(levels_hi)
+        prev = levels[-1]
+        # min(prev[i], prev[i+h]) with +inf padding past the end
+        pad = jnp.full((h, 2 * dim), jnp.inf, key.dtype)
+        levels.append(jnp.minimum(prev, jnp.concatenate([prev[h:], pad], 0)))
+    tbl = jnp.stack(levels)                               # (L, N, 2*dim)
 
     length = last - first + 1
     k = 31 - M._clz32(length.astype(jnp.uint32))          # floor(log2(len))
     off = last - (jnp.int32(1) << k) + 1
-    lo = jnp.minimum(tbl_lo[k, first], tbl_lo[k, off])
-    hi = jnp.maximum(tbl_hi[k, first], tbl_hi[k, off])
-    return lo, hi
+    combo = jnp.minimum(tbl[k, first], tbl[k, off])
+    return combo[:, :dim], -combo[:, dim:]
 
 
 def _refit_iterative(leaf_lo, leaf_hi, left_child, right_child):
@@ -234,4 +234,61 @@ def build(boxes: Boxes, *, bits: int = 64, refit: str = "rmq") -> LBVH:
                      right_child[split_owner[safe_last]]).astype(jnp.int32)
 
     return LBVH(node_lo, node_hi, left_child, right_child, rope,
-                range_last, perm.astype(jnp.int32))
+                range_last, perm.astype(jnp.int32), first.astype(jnp.int32))
+
+
+@jax.jit
+def refit(tree: LBVH, boxes: Boxes) -> LBVH:
+    """Recompute all AABBs for new leaf boxes, reusing the existing topology.
+
+    The Karras ranges, Apetrei links, and ropes are functions of the Morton
+    *order* only — they are coordinate-free. As long as the leaves keep their
+    identity (same N, boxes indexed like the build input), moving the
+    coordinates only invalidates the AABBs, which one RMQ pass recomputes.
+    No sort, no range search: this is the fast path between simulation time
+    steps (Prokopenko et al. 2024). Quality degrades as points drift from the
+    build-time Morton order; monitor with :func:`sah_cost` and rebuild past a
+    threshold (``service.IndexStore`` automates this).
+
+    `boxes` are in ORIGINAL index order, exactly like the ``build`` input.
+    """
+    n = tree.num_leaves
+    if boxes.lo.shape[0] != n:
+        raise ValueError(f"refit needs the same leaf count (tree has {n}, "
+                         f"got {boxes.lo.shape[0]}); rebuild instead")
+    max_log2 = max((n - 1).bit_length(), 1)
+    leaf_lo = boxes.lo[tree.leaf_perm]
+    leaf_hi = boxes.hi[tree.leaf_perm]
+    int_lo, int_hi = _refit_rmq(leaf_lo, leaf_hi, tree.range_first,
+                                tree.range_last[:n - 1], max_log2)
+    return dataclasses.replace(
+        tree,
+        node_lo=jnp.concatenate([int_lo, leaf_lo], 0),
+        node_hi=jnp.concatenate([int_hi, leaf_hi], 0))
+
+
+def _surface_measure(lo, hi):
+    """(M,) dimension-generic surface measure: sum over faces of the product
+    of the other extents (2D: perimeter/2, 3D: surface area/2). 1D uses the
+    interval length (hit probability is proportional to length, and a
+    constant would make the drift monitor inert)."""
+    e = jnp.maximum(hi - lo, 0.0)
+    d = e.shape[-1]
+    if d == 1:
+        return e[..., 0]
+    total = jnp.zeros(e.shape[:-1], e.dtype)
+    for i in range(d):
+        keep = jnp.arange(d) != i
+        total = total + jnp.prod(jnp.where(keep, e, 1.0), axis=-1)
+    return total
+
+
+@jax.jit
+def sah_cost(tree: LBVH) -> jax.Array:
+    """SAH-style tree quality: sum of internal-node surface measures over the
+    root's (expected traversal cost up to constants; Goldsmith & Salmon 1987).
+    Lower is better. Refit preserves topology, so drifting points inflate
+    internal boxes and this ratio grows — the rebuild trigger."""
+    n = tree.num_leaves
+    areas = _surface_measure(tree.node_lo[:n - 1], tree.node_hi[:n - 1])
+    return jnp.sum(areas) / jnp.maximum(areas[0], jnp.finfo(areas.dtype).tiny)

@@ -51,8 +51,11 @@ def cast_ordered(bvh, rays: G.Rays, capacity: int | None = None):
     nq = len(rays)
     preds = P.RayOrderedIntersect(rays)
     if capacity is None:
-        counts = bvh.count(None, preds)
-        capacity = max(int(counts.max()), 1)
+        if nq:
+            counts = bvh.count(None, preds)
+            capacity = max(int(counts.max()), 1)
+        else:
+            capacity = 1    # jnp.max of an empty counts array would throw
     import repro.core.callbacks as CB
     cb, s0 = CB.collect_hits(capacity)
     s0 = jax.tree_util.tree_map(

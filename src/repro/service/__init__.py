@@ -1,0 +1,24 @@
+"""Online geometric query service (DESIGN.md §5).
+
+The production analogue of ArborX 2.0's unified query interface: a
+synchronous frontend that serves heterogeneous spatial / kNN / ray traffic
+over *live* indexes.
+
+  * :mod:`index_store` — versioned index registry with atomic
+    build-and-swap and refit-or-rebuild updates (``lbvh.refit`` + the SAH
+    quality monitor).
+  * :mod:`batcher`     — shape-bucketed micro-batching: requests are
+    grouped by predicate kind and padded to power-of-two buckets so every
+    dispatch hits a warm jitted executable.
+  * :mod:`server`      — ``QueryServer`` tying registry + batcher +
+    ``QueryEngine`` together, with per-request stats (route, bucket,
+    index version).
+"""
+from .batcher import (Batcher, Request, knn_request, ray_request,
+                      within_request)
+from .index_store import IndexStore, IndexVersion
+from .server import QueryServer, Response, ServiceConfig
+
+__all__ = ["Batcher", "Request", "knn_request", "ray_request",
+           "within_request", "IndexStore", "IndexVersion", "QueryServer",
+           "Response", "ServiceConfig"]

@@ -1,0 +1,124 @@
+"""Versioned index registry with atomic build-and-swap (DESIGN.md §5).
+
+Between simulation time steps the geometry moves but mostly keeps its
+identity, so a full rebuild (Morton sort + Karras ranges + linking) is
+wasted work: the topology is coordinate-free and only the AABBs are stale
+(Prokopenko et al. 2024). ``update`` therefore refits by default — one RMQ
+pass over the permuted new boxes — and falls back to a full rebuild when
+
+  * the leaf count changed (topology can't be reused), or
+  * the SAH-style quality monitor says the drifted Morton order has
+    degraded the tree past ``rebuild_threshold`` × its at-build cost.
+
+Swap semantics: builds/refits run OUTSIDE the registry lock (they are the
+slow part); the publication of the finished :class:`IndexVersion` is a
+single dict assignment under the lock. Readers that grabbed the previous
+version keep a fully consistent immutable snapshot — recent versions stay
+pinned in a small history ring so in-flight queries never see a
+half-updated index.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+from ..core import engine as E
+from ..core import lbvh
+from ..core.access import default_indexable_getter
+from ..core.bvh import BVH
+
+__all__ = ["IndexStore", "IndexVersion"]
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexVersion:
+    """Immutable snapshot of one published index version."""
+    name: str
+    version: int
+    bvh: BVH
+    action: str                 # "build" | "refit" | "rebuild"
+    sah: float                  # quality of THIS tree
+    sah_built: float            # quality at the last full (re)build
+    refits_since_build: int
+
+    @property
+    def degradation(self) -> float:
+        """Current SAH cost relative to the last full build (1.0 = fresh)."""
+        return self.sah / max(self.sah_built, 1e-30)
+
+
+class IndexStore:
+    """Thread-safe name -> IndexVersion registry with refit-aware updates."""
+
+    def __init__(self, engine: E.QueryEngine | None = None, *,
+                 rebuild_threshold: float = 1.5, keep_versions: int = 3):
+        self.engine = engine if engine is not None else E.QueryEngine()
+        self.rebuild_threshold = float(rebuild_threshold)
+        self.keep_versions = int(keep_versions)
+        self._lock = threading.Lock()
+        self._live: dict[str, IndexVersion] = {}
+        self._history: dict[str, dict[int, IndexVersion]] = {}
+
+    # -- reads -------------------------------------------------------------
+    def get(self, name: str, version: int | None = None) -> IndexVersion:
+        with self._lock:
+            if version is None:
+                return self._live[name]
+            return self._history[name][version]
+
+    def names(self) -> list[str]:
+        with self._lock:
+            return sorted(self._live)
+
+    # -- writes ------------------------------------------------------------
+    def build(self, name: str, values,
+              indexable_getter=default_indexable_getter) -> IndexVersion:
+        """Build a fresh index and atomically publish it as the next version."""
+        return self._publish(name, values, indexable_getter, action="build")
+
+    def update(self, name: str, values) -> IndexVersion:
+        """Refit the live index to moved values; rebuild if quality demands.
+
+        `values` must be indexable by the getter the index was created
+        with. Refit requires an unchanged leaf count; anything else (or a
+        degenerate index) rebuilds.
+        """
+        cur = self.get(name)
+        getter = cur.bvh._getter
+        boxes = getter(values)
+        if cur.bvh.tree is None or len(boxes) != cur.bvh.size():
+            return self._publish(name, values, getter, action="rebuild")
+
+        new_tree = lbvh.refit(cur.bvh.tree, boxes)
+        sah = float(lbvh.sah_cost(new_tree))
+        if sah > self.rebuild_threshold * cur.sah_built:
+            return self._publish(name, values, getter, action="rebuild")
+
+        bvh = BVH.from_tree(cur.bvh.space, values, new_tree, getter,
+                            engine=self.engine)
+        return self._swap(IndexVersion(
+            name=name, version=0, bvh=bvh, action="refit", sah=sah,
+            sah_built=cur.sah_built,
+            refits_since_build=cur.refits_since_build + 1))
+
+    # -- internals ---------------------------------------------------------
+    def _publish(self, name, values, getter, *, action) -> IndexVersion:
+        bvh = BVH(None, values, getter, engine=self.engine)
+        sah = float(lbvh.sah_cost(bvh.tree)) if bvh.tree is not None else 0.0
+        return self._swap(IndexVersion(
+            name=name, version=0, bvh=bvh, action=action, sah=sah,
+            sah_built=sah, refits_since_build=0))
+
+    def _swap(self, entry: IndexVersion) -> IndexVersion:
+        """The atomic publish: version assignment + one dict write, both
+        under the lock (the slow build/refit already happened outside)."""
+        with self._lock:
+            prev = self._live.get(entry.name)
+            entry = dataclasses.replace(
+                entry, version=(prev.version + 1) if prev else 1)
+            self._live[entry.name] = entry
+            hist = self._history.setdefault(entry.name, {})
+            hist[entry.version] = entry
+            while len(hist) > self.keep_versions:
+                del hist[min(hist)]
+        return entry

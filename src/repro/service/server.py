@@ -1,0 +1,172 @@
+"""QueryServer: the synchronous service frontend (DESIGN.md §5).
+
+One ``handle(requests)`` call is a scheduling quantum: the batcher plans
+shape-stable groups, each group is dispatched once through the engine's
+executable cache against a *pinned* index version (grabbed at dispatch
+time; concurrent ``update_index`` swaps never tear a batch), and results
+scatter back to per-request :class:`Response` objects carrying stats —
+which route served it, which bucket it rode in, which index version it
+saw, and whether the executable was warm.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import engine as E
+from ..core import geometry as G
+from ..core import predicates as P
+from ..core.access import default_indexable_getter
+from .batcher import (KIND_KNN, KIND_RAY, KIND_WITHIN, Batcher, Group,
+                      Request, bucket_size, knn_request, ray_request,
+                      within_request)
+from .index_store import IndexStore, IndexVersion
+
+__all__ = ["ServiceConfig", "RequestStats", "Response", "QueryServer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """capacity: CSR buffer width per within-radius query. Held FIXED so
+    every within bucket reuses one executable; requests that overflow it
+    are flagged (callers needing exact spill re-issue via ``BVH.query``,
+    which auto-retries with doubled capacity).
+    min_bucket: smallest (and alignment of) power-of-two bucket.
+    rebuild_threshold: SAH degradation ratio that turns a refit into a
+    full rebuild (forwarded to the IndexStore the server creates)."""
+    capacity: int = 64
+    min_bucket: int = 8
+    rebuild_threshold: float = 1.5
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestStats:
+    kind: str
+    route: str            # bruteforce | pallas | loop
+    bucket: int           # power-of-two batch the request rode in
+    index_name: str
+    index_version: int
+    cache_hit: bool       # executable was already warm
+
+
+@dataclasses.dataclass(frozen=True)
+class Response:
+    """Per-request results. knn/ray fill (dists, idxs) (m, k) — dists are
+    ray-hit parameters t for ray requests; within fills (counts, idxs)
+    with idxs (m, capacity) -1-padded and `overflow` set when any query
+    matched more than `capacity`."""
+    stats: RequestStats
+    dists: np.ndarray | None = None
+    idxs: np.ndarray | None = None
+    counts: np.ndarray | None = None
+    overflow: bool = False
+
+
+class QueryServer:
+    def __init__(self, store: IndexStore | None = None,
+                 engine: E.QueryEngine | None = None,
+                 config: ServiceConfig | None = None):
+        self.config = config or ServiceConfig()
+        if store is not None:
+            self.store = store
+            self.engine = engine if engine is not None else store.engine
+        else:
+            self.engine = engine if engine is not None else E.QueryEngine()
+            self.store = IndexStore(
+                self.engine,
+                rebuild_threshold=self.config.rebuild_threshold)
+        self.batcher = Batcher(self.config.min_bucket)
+
+    # -- index lifecycle ---------------------------------------------------
+    def create_index(self, name: str, values,
+                     indexable_getter=default_indexable_getter) -> IndexVersion:
+        return self.store.build(name, values, indexable_getter)
+
+    def update_index(self, name: str, values) -> IndexVersion:
+        """Refit-or-rebuild to moved values; see IndexStore.update."""
+        return self.store.update(name, values)
+
+    # -- serving -----------------------------------------------------------
+    def handle(self, requests: list[Request]) -> list[Response]:
+        """Serve a batch of heterogeneous requests; responses align with
+        the input order."""
+        responses: list[Response | None] = [None] * len(requests)
+        for group in self.batcher.plan(requests):
+            self._dispatch(group, responses)
+        return responses  # type: ignore[return-value]
+
+    def warmup(self, index: str, kinds_ks: list[tuple[str, int]],
+               max_bucket: int, dim: int):
+        """Pre-trace every (kind, k, bucket) executable for buckets up to
+        (and including) the one `max_bucket` queries would ride in, so live
+        traffic sees only warm dispatches."""
+        b = self.config.min_bucket
+        top = bucket_size(max_bucket, self.config.min_bucket)
+        while b <= top:
+            reqs = []
+            for kind, k in kinds_ks:
+                a = np.zeros((b, dim), np.float32)
+                if kind == KIND_WITHIN:
+                    reqs.append(within_request(a, 0.0, index))
+                elif kind == KIND_RAY:
+                    reqs.append(ray_request(a, np.ones((b, dim), np.float32),
+                                            k, index))
+                else:
+                    reqs.append(knn_request(a, k, index))
+            self.handle(reqs)
+            b *= 2
+
+    # -- internals ---------------------------------------------------------
+    def _dispatch(self, group: Group, responses: list):
+        entry = self.store.get(group.index)
+        bvh = entry.bvh
+        a = jnp.asarray(group.a)
+        # degenerate indexes (N < 2) have no tree; the engine's cached
+        # executables need one, but the BVH API itself linear-scans — a
+        # cloud that shrinks to one point must not take down serving
+        tiny = bvh.tree is None
+        info = E.ExecInfo(E.ROUTE_LOOP, False) if tiny else None
+
+        overflow_rows = None
+        if group.kind == KIND_WITHIN:
+            preds = P.intersects(G.Spheres(a, jnp.asarray(group.b)))
+            if tiny:
+                counts, buf = bvh._fill(preds, self.config.capacity)
+            else:
+                (counts, buf), info = self.engine.exec_spatial(
+                    bvh, preds, self.config.capacity)
+            counts, buf = np.asarray(counts), np.asarray(buf)
+            overflow_rows = counts > self.config.capacity
+            res_rows = (counts, buf)
+        elif group.kind == KIND_KNN:
+            preds = P.nearest(G.Points(a), k=group.k)
+            if tiny:
+                d, i = bvh.knn(None, preds)
+            else:
+                (d, i), info = self.engine.exec_knn(bvh, preds)
+            res_rows = (np.asarray(d), np.asarray(i))
+        else:  # KIND_RAY
+            rays = G.Rays(a, jnp.asarray(group.b))
+            if tiny:
+                d, i = bvh.knn(None, P.RayNearest(rays, group.k))
+            else:
+                (d, i), info = self.engine.exec_ray_nearest(
+                    bvh, rays, group.k)
+            res_rows = (np.asarray(d), np.asarray(i))
+
+        for rid, start, m in group.members:
+            stats = RequestStats(kind=group.kind, route=info.route,
+                                 bucket=group.bucket, index_name=entry.name,
+                                 index_version=entry.version,
+                                 cache_hit=info.cache_hit)
+            sl = slice(start, start + m)
+            if group.kind == KIND_WITHIN:
+                counts, buf = res_rows
+                responses[rid] = Response(
+                    stats, counts=counts[sl], idxs=buf[sl],
+                    overflow=bool(overflow_rows[sl].any()))
+            else:
+                d, i = res_rows
+                responses[rid] = Response(stats, dists=d[sl], idxs=i[sl])

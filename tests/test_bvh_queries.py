@@ -149,8 +149,9 @@ def test_csr_zero_total_matches():
 
 
 def test_csr_capacity_clamping():
-    """counts > capacity: offsets cumsum the CLAMPED counts, every stored
-    slice is a subset of the true match set, counts stay unclamped."""
+    """max_doublings=0 pins the raw truncation contract: offsets cumsum the
+    CLAMPED counts, every stored slice is a subset of the true match set,
+    and the result carries overflow=True."""
     from repro.core.engine import EngineConfig, QueryEngine
     vals = _points(60, seed=51)
     preds = P.intersects(G.Spheres(vals.coords[:5], jnp.full((5,), 10.0)))
@@ -159,8 +160,10 @@ def test_csr_capacity_clamping():
     cap = 7
     for force in ("loop", "bruteforce", "pallas"):
         eng = QueryEngine(EngineConfig(force=force))
-        _, idx, off = BVH(None, vals, engine=eng).query(None, preds,
-                                                        capacity=cap)
+        res = BVH(None, vals, engine=eng).query(None, preds, capacity=cap,
+                                                max_doublings=0)
+        _, idx, off = res
+        assert res.overflow
         off = np.asarray(off)
         assert np.array_equal(off, np.arange(6) * cap)
         idx = np.asarray(idx)
@@ -168,6 +171,37 @@ def test_csr_capacity_clamping():
         for qi in range(5):
             s = set(idx[off[qi]:off[qi + 1]].tolist())
             assert len(s) == cap and s <= set(range(60))
+
+
+def test_csr_capacity_overflow_doubling_retry():
+    """A low capacity guess no longer truncates silently: the fill is
+    retried at doubled capacity until the true max count fits, and the
+    result unpacks like a plain 3-tuple with overflow=False."""
+    from repro.core.engine import EngineConfig, QueryEngine
+    vals = _points(60, seed=51)
+    preds = P.intersects(G.Spheres(vals.coords[:5], jnp.full((5,), 10.0)))
+    for force in ("loop", "bruteforce", "pallas"):
+        eng = QueryEngine(EngineConfig(force=force))
+        res = BVH(None, vals, engine=eng).query(None, preds, capacity=7)
+        v, idx, off = res
+        assert not res.overflow
+        off = np.asarray(off)
+        assert np.array_equal(off, np.arange(6) * 60)   # full result sets
+        for qi in range(5):
+            assert set(np.asarray(idx[off[qi]:off[qi + 1]]).tolist()) \
+                == set(range(60))
+
+
+def test_csr_capacity_retry_cap_flags_overflow():
+    """The retry is capped: with max_doublings=1 a 7 -> 14 bump cannot fit
+    60 matches, so the result stays truncated (at the doubled width) and
+    is flagged."""
+    vals = _points(60, seed=51)
+    preds = P.intersects(G.Spheres(vals.coords[:5], jnp.full((5,), 10.0)))
+    res = BVH(None, vals).query(None, preds, capacity=7, max_doublings=1)
+    _, idx, off = res
+    assert res.overflow
+    assert np.array_equal(np.asarray(off), np.arange(6) * 14)
 
 
 def test_csr_empty_predicate_batch():

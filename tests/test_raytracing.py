@@ -94,3 +94,49 @@ def test_boxes_ray_tracing():
     counts = np.asarray(hit).sum(1)
     _, idx, off = RT.cast_intersect(bvh, rays)
     assert np.array_equal(np.diff(np.asarray(off)), counts)
+
+
+# ---------------------------------------------------------------------------
+# cast_ordered edge cases + the sorted-by-t contract (§2.5 ordered_intersect)
+# ---------------------------------------------------------------------------
+
+def test_cast_ordered_sorted_by_t_matches_oracle_t():
+    """Within every ray the CSR segment is ascending in t AND each stored t
+    equals the oracle hit parameter of the stored primitive."""
+    tris, abc = _tri_soup(seed=21)
+    rays, (o, d) = _rays(seed=22)
+    bvh = BVH(None, tris)
+    hit, t = _oracle_hits(o, d, abc)
+    fi, ft, off = RT.cast_ordered(bvh, rays)
+    fi, ft, off = np.asarray(fi), np.asarray(ft), np.asarray(off)
+    for q in range(len(o)):
+        seg_i, seg_t = fi[off[q]:off[q + 1]], ft[off[q]:off[q + 1]]
+        assert np.all(np.diff(seg_t) >= 0)
+        assert np.allclose(seg_t, t[q][seg_i], atol=1e-5)
+        assert np.array_equal(seg_i, seg_i[np.argsort(t[q][seg_i],
+                                                      kind="stable")])
+
+
+def test_cast_ordered_zero_rays():
+    """Q == 0 must produce the empty CSR, not crash sizing capacity from an
+    empty counts reduction."""
+    tris, _ = _tri_soup(seed=23)
+    bvh = BVH(None, tris)
+    empty = G.Rays(jnp.zeros((0, 3), jnp.float32),
+                   jnp.ones((0, 3), jnp.float32))
+    fi, ft, off = RT.cast_ordered(bvh, empty)
+    assert fi.shape == (0,) and ft.shape == (0,)
+    assert np.array_equal(np.asarray(off), np.zeros(1, np.int32))
+
+
+def test_cast_ordered_zero_hits():
+    """Rays that miss everything: offsets all zero, empty flat arrays."""
+    tris, _ = _tri_soup(seed=24)
+    bvh = BVH(None, tris)
+    # scene lives in [-0.1, 1.1]^3; shoot from far away, pointing away
+    o = np.full((6, 3), 50.0, np.float32)
+    d = np.tile(np.array([[1.0, 0.0, 0.0]], np.float32), (6, 1))
+    rays = G.Rays(jnp.asarray(o), jnp.asarray(d))
+    fi, ft, off = RT.cast_ordered(bvh, rays)
+    assert fi.shape == (0,) and ft.shape == (0,)
+    assert np.array_equal(np.asarray(off), np.zeros(7, np.int32))

@@ -1,0 +1,151 @@
+"""lbvh.refit + the SAH quality monitor (DESIGN.md §5).
+
+The acceptance bar: refit reuses the topology EXACTLY (coordinate-free
+Karras ranges + ropes), recomputes only the AABBs, and therefore returns
+bit-identical query *sets* to a from-scratch rebuild on the same coords.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import geometry as G, predicates as P
+from repro.core.bvh import BVH
+from repro.core.lbvh import build, refit, sah_cost
+from repro.service import IndexStore
+
+
+def _pts(n, dim=3, seed=0, scale=1.0):
+    r = np.random.default_rng(seed)
+    return (r.uniform(0, scale, (n, dim)).astype(np.float32))
+
+
+def _boxes(p):
+    a = jnp.asarray(p)
+    return G.Boxes(a, a)
+
+
+def test_refit_unmoved_is_bitwise_identity():
+    p = _pts(400, seed=1)
+    tree = build(_boxes(p))
+    t2 = refit(tree, _boxes(p))
+    for f in ("node_lo", "node_hi", "left_child", "right_child", "rope",
+              "range_last", "leaf_perm", "range_first"):
+        assert np.array_equal(np.asarray(getattr(tree, f)),
+                              np.asarray(getattr(t2, f))), f
+
+
+@pytest.mark.parametrize("n,dim", [(64, 2), (400, 3), (513, 5)])
+def test_refit_parent_boxes_contain_children(n, dim):
+    p = _pts(n, dim, seed=n)
+    tree = build(_boxes(p))
+    moved = p + np.random.default_rng(n + 1).normal(
+        0, 0.05, p.shape).astype(np.float32)
+    t2 = refit(tree, _boxes(moved))
+    lo, hi = np.asarray(t2.node_lo), np.asarray(t2.node_hi)
+    lc, rc = np.asarray(t2.left_child), np.asarray(t2.right_child)
+    for child in (lc, rc):
+        assert (lo[: n - 1] <= lo[child] + 1e-7).all()
+        assert (hi[: n - 1] >= hi[child] - 1e-7).all()
+
+
+@pytest.mark.parametrize("jitter", [0.005, 0.05])
+def test_refit_query_sets_bit_identical_to_rebuild(jitter):
+    """The acceptance criterion: same coords, refit vs full rebuild ->
+    identical counts and identical per-query match sets (topology may
+    differ; the result sets may not)."""
+    p = _pts(600, seed=7)
+    tree = build(_boxes(p))
+    moved = p + np.random.default_rng(8).normal(
+        0, jitter, p.shape).astype(np.float32)
+    vals = G.Points(jnp.asarray(moved))
+    bvh_refit = BVH.from_tree(None, vals, refit(tree, _boxes(moved)))
+    bvh_fresh = BVH(None, vals)
+
+    q = jnp.asarray(_pts(48, seed=9))
+    preds = P.intersects(G.Spheres(q, jnp.full((48,), 0.15, jnp.float32)))
+    ca = np.asarray(bvh_refit.count(None, preds))
+    cb = np.asarray(bvh_fresh.count(None, preds))
+    assert np.array_equal(ca, cb)
+
+    _, ia, oa = bvh_refit.query(None, preds)
+    _, ib, ob = bvh_fresh.query(None, preds)
+    ia, ib, oa, ob = map(np.asarray, (ia, ib, oa, ob))
+    assert np.array_equal(oa, ob)
+    for i in range(48):
+        assert set(ia[oa[i]:oa[i + 1]].tolist()) \
+            == set(ib[ob[i]:ob[i + 1]].tolist())
+
+    # kNN agrees too (fine distances are tree-independent)
+    knn = P.nearest(G.Points(q), k=6)
+    da, _ = bvh_refit.knn(None, knn)
+    db, _ = bvh_fresh.knn(None, knn)
+    assert np.allclose(np.asarray(da), np.asarray(db), atol=1e-5)
+
+
+def test_refit_rejects_changed_leaf_count():
+    p = _pts(100, seed=11)
+    tree = build(_boxes(p))
+    with pytest.raises(ValueError, match="same leaf count"):
+        refit(tree, _boxes(_pts(101, seed=12)))
+
+
+def test_sah_cost_degrades_with_drift():
+    """Large drift scrambles the Morton order the topology was built for:
+    the refitted tree must cost more than a fresh build on the same coords."""
+    p = _pts(500, seed=13)
+    tree = build(_boxes(p))
+    scrambled = np.random.default_rng(14).permutation(p, axis=0)
+    t_refit = refit(tree, _boxes(scrambled))
+    t_fresh = build(_boxes(scrambled))
+    assert float(sah_cost(t_refit)) > 1.5 * float(sah_cost(t_fresh))
+
+
+# ---------------------------------------------------------------------------
+# IndexStore: versioning, atomic swap, refit-or-rebuild policy
+# ---------------------------------------------------------------------------
+
+def test_index_store_versioning_and_history():
+    store = IndexStore()
+    p = _pts(300, seed=21)
+    v1 = store.build("pts", G.Points(jnp.asarray(p)))
+    assert (v1.version, v1.action) == (1, "build")
+    moved = p + 0.001
+    v2 = store.update("pts", G.Points(jnp.asarray(moved)))
+    assert (v2.version, v2.action) == (2, "refit")
+    assert v2.refits_since_build == 1
+    # live pointer swapped; the old version stays pinned in history
+    assert store.get("pts").version == 2
+    assert store.get("pts", version=1).bvh is v1.bvh
+    # in-flight reader holding v1 still sees the OLD coords
+    assert np.array_equal(np.asarray(store.get("pts", 1).bvh.values.coords), p)
+
+
+def test_index_store_small_drift_refits_large_drift_rebuilds():
+    store = IndexStore(rebuild_threshold=1.2)
+    p = _pts(400, seed=23)
+    store.build("pts", G.Points(jnp.asarray(p)))
+    small = p + np.random.default_rng(24).normal(
+        0, 1e-3, p.shape).astype(np.float32)
+    assert store.update("pts", G.Points(jnp.asarray(small))).action == "refit"
+    scrambled = np.random.default_rng(25).permutation(p, axis=0)
+    v = store.update("pts", G.Points(jnp.asarray(scrambled)))
+    assert v.action == "rebuild"
+    assert v.refits_since_build == 0 and v.degradation == 1.0
+
+
+def test_index_store_leaf_count_change_rebuilds():
+    store = IndexStore()
+    p = _pts(200, seed=26)
+    store.build("pts", G.Points(jnp.asarray(p)))
+    v = store.update("pts", G.Points(jnp.asarray(_pts(250, seed=27))))
+    assert v.action == "rebuild" and v.version == 2
+
+
+def test_sah_cost_drift_sensitive_in_1d():
+    """1-D measure is interval length, so the rebuild monitor works for
+    dim=1 too (a constant per-node measure would never trigger)."""
+    p = _pts(256, dim=1, seed=31)
+    tree = build(_boxes(p))
+    scrambled = np.random.default_rng(32).permutation(p, axis=0)
+    assert float(sah_cost(refit(tree, _boxes(scrambled)))) \
+        > 1.5 * float(sah_cost(build(_boxes(scrambled))))
