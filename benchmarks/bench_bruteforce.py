@@ -25,12 +25,12 @@ def main():
         pts = jnp.asarray(point_cloud("uniform", n, seed=5))
         values = G.Points(pts)
         preds = P.nearest(G.Points(qp), k=k)
-        bvh = BVH(None, values)
-        bf = BruteForce(None, values)
-        t_tree = timeit(lambda: bvh.knn(None, preds))
-        t_brute = timeit(lambda: bf.knn(None, preds))
-        d1, _ = bvh.knn(None, preds)
-        d2, _ = bf.knn(None, preds)
+        bvh = BVH(values)
+        bf = BruteForce(values)
+        t_tree = timeit(lambda: bvh.query(preds))
+        t_brute = timeit(lambda: bf.query(preds))
+        d1 = bvh.query(preds).distances
+        d2 = bf.query(preds).distances
         ok = np.allclose(np.asarray(d1), np.asarray(d2), atol=1e-5)
         row(f"bruteforce/knn/n{n}/bvh", t_tree, f"exact={ok}")
         row(f"bruteforce/knn/n{n}/brute_mxu", t_brute,

@@ -22,7 +22,7 @@ def main():
     pts = jnp.asarray(point_cloud("uniform", n, seed=6))
     qp = jnp.asarray(point_cloud("uniform", q, seed=7))
     values = G.Points(pts)
-    bvh = BVH(None, values)
+    bvh = BVH(values)
     preds = P.intersects(G.Spheres(qp, jnp.full((q,), r, jnp.float32)))
 
     def cb(state, pred, value, index, t):
@@ -30,14 +30,14 @@ def main():
         d = jnp.sqrt(jnp.sum((pred.geom.center - value.coords) ** 2))
         return (s + d, c + 1), jnp.bool_(False)
 
-    s0 = (jnp.zeros((q,)), jnp.zeros((q,), jnp.int32))
+    s0 = (jnp.zeros(()), jnp.int32(0))
 
     def callback_path():
-        s, c = bvh.query_callback(None, preds, cb, s0)
+        s, c = bvh.query(preds, callback=(cb, s0))
         return s / jnp.maximum(c, 1)
 
     def store_path():
-        vals, idx, off = bvh.query(None, preds)
+        vals, idx, off = bvh.query(preds)[:3]
         d = jnp.sqrt(jnp.sum((qp[_repeat_qid(off, idx.shape[0])]
                               - vals.coords) ** 2, -1))
         seg = _repeat_qid(off, idx.shape[0])
@@ -55,7 +55,7 @@ def main():
 
     t_cb = timeit(callback_path)
     t_store = timeit(store_path)
-    total_matches = int(bvh.count(None, preds).sum())
+    total_matches = int(bvh.count(preds).sum())
     intermediate = total_matches * 8  # int32 idx + f32 t
     row("callbacks/reduce_in_callback", t_cb,
         f"intermediate=0B match={match}")

@@ -15,7 +15,8 @@ from ._util import row
 _CODE = """
 import jax, jax.numpy as jnp, numpy as np
 from repro.compat import AxisType, make_mesh
-from repro.core.distributed import DistributedTree
+from repro.core import geometry as G, predicates as P, callbacks as CB
+from repro.core.distributed import DistributedTree, ship_values_baseline
 from repro.launch.hloanalysis import analyze
 
 R = __R__
@@ -32,8 +33,13 @@ def lower_bytes(fn, *args):
     c = jax.jit(fn).lower(*args).compile()
     return analyze(c.as_text())["collective_bytes"]
 
-b_cb = lower_bytes(lambda q: dt.query_radius_count(q, 0.2), qp)
-b_ship = lower_bytes(lambda q: dt.query_values_to_origin(q, 0.2, 64), qp)
+def radius_count(q):
+    nq = q.shape[0]
+    preds = P.intersects(G.Spheres(q, jnp.full((nq,), 0.2, q.dtype)))
+    return dt.query(preds, callback=CB.counting())
+
+b_cb = lower_bytes(radius_count, qp)
+b_ship = lower_bytes(lambda q: ship_values_baseline(dt, q, 0.2, 64), qp)
 print(f"RESULT {R} {b_cb} {b_ship}")
 """
 

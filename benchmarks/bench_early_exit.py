@@ -17,17 +17,15 @@ def main():
     for kind, r in (("uniform", 0.08), ("clusters", 0.05)):
         pts = jnp.asarray(point_cloud(kind, n, seed=8))
         qp = pts[:q]
-        bvh = BVH(None, G.Points(pts))
+        bvh = BVH(G.Points(pts))
         preds = P.intersects(G.Spheres(qp, jnp.full((q,), r, jnp.float32)))
 
-        cb_full, s_full = CB.counting()
-        cb_lim, s_lim = CB.count_with_limit(8)
-        sf = jnp.broadcast_to(s_full, (q,))
-        sl = jnp.broadcast_to(s_lim, (q,))
+        full_cb = CB.counting()
+        lim_cb = CB.count_with_limit(8)
 
-        t_full = timeit(lambda: bvh.query_callback(None, preds, cb_full, sf))
-        t_lim = timeit(lambda: bvh.query_callback(None, preds, cb_lim, sl))
-        mean_matches = float(bvh.count(None, preds).mean())
+        t_full = timeit(lambda: bvh.query(preds, callback=full_cb))
+        t_lim = timeit(lambda: bvh.query(preds, callback=lim_cb))
+        mean_matches = float(bvh.count(preds).mean())
         row(f"early_exit/{kind}/full_count", t_full,
             f"mean_matches={mean_matches:.1f}")
         row(f"early_exit/{kind}/limit8", t_lim,

@@ -18,7 +18,7 @@ def main():
     b = a + rng.uniform(-0.05, 0.05, (n, 3)).astype(np.float32)
     c = a + rng.uniform(-0.05, 0.05, (n, 3)).astype(np.float32)
     tris = G.Triangles(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c))
-    bvh = BVH(None, tris)
+    bvh = BVH(tris)
     o = jnp.asarray(point_cloud("uniform", r, seed=12))
     d = jnp.asarray(rng.normal(size=(r, 3)).astype(np.float32))
     rays = G.Rays(o, d)

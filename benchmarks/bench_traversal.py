@@ -74,9 +74,9 @@ def bench_engine_paths(n: int, q: int = 512, radius: float = 0.05):
     times = {}
     counts = {}
     for route in (ROUTE_LOOP, ROUTE_PALLAS, ROUTE_BRUTEFORCE):
-        bvh = BVH(None, vals, engine=QueryEngine(EngineConfig(force=route)))
-        times[route] = timeit(lambda b=bvh: b.count(None, preds))
-        counts[route] = np.asarray(bvh.count(None, preds))
+        bvh = BVH(vals, engine=QueryEngine(EngineConfig(force=route)))
+        times[route] = timeit(lambda b=bvh: b.count(preds))
+        counts[route] = np.asarray(bvh.count(preds))
         row(f"engine/N={n}/Q={q}/{route}", times[route],
             f"speedup_vs_loop={times[ROUTE_LOOP] / times[route]:.2f}x")
     assert np.array_equal(counts[ROUTE_LOOP], counts[ROUTE_BRUTEFORCE])
@@ -92,13 +92,13 @@ def main():
     qp = point_cloud("uniform", q, seed=3)
     values = G.Points(jnp.asarray(pts))
     tree = build(G.Boxes(jnp.asarray(pts), jnp.asarray(pts)))
-    bvh = BVH(None, values)
+    bvh = BVH(values)
     preds = P.intersects(G.Spheres(jnp.asarray(qp),
                                    jnp.full((q,), 0.05, jnp.float32)))
 
-    t_rope = timeit(lambda: bvh.count(None, preds))
+    t_rope = timeit(lambda: bvh.count(preds))
     t_stack = timeit(lambda: _stack_count(tree, values, preds))
-    a = np.asarray(bvh.count(None, preds))
+    a = np.asarray(bvh.count(preds))
     b = np.asarray(_stack_count(tree, values, preds))
     # box-level counts differ from fine counts only for non-point values
     row("traversal/stackless_ropes", t_rope,

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 from repro.compat import AxisType, make_mesh
 
+from repro.core import geometry as G, nearest, intersects
+from repro.core import predicates as P
 from repro.core.distributed import DistributedTree
 from repro.data import point_cloud
 
@@ -24,16 +26,18 @@ def main():
     mesh = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
     print(f"mesh: {mesh.shape} over {len(jax.devices())} devices")
 
+    # the SAME unified query() as BVH/BruteForce, over sharded values
     pts = jnp.asarray(point_cloud("clusters", 4096, seed=1))
     dt = DistributedTree(mesh, "data", pts)
     print(f"local tree size: {dt.n_local} points x {dt.R} shards")
 
     queries = jnp.asarray(point_cloud("uniform", 512, seed=2))
-    d, gi = dt.query_knn(queries, 4)
-    print(f"kNN: mean 1-NN distance {float(d[:, 0].mean()):.4f}; "
-          f"results carry GLOBAL indices (max={int(gi.max())})")
+    res = dt.query(nearest(G.Points(queries), k=4))
+    print(f"kNN: mean 1-NN distance {float(res.distances[:, 0].mean()):.4f}; "
+          f"results carry GLOBAL indices (max={int(res.indices.max())})")
 
-    counts = dt.query_radius_count(queries, 0.05)
+    counts = dt.count(intersects(G.Spheres(
+        queries, jnp.full((queries.shape[0],), 0.05, jnp.float32))))
     print(f"radius count: mean {float(counts.mean()):.1f} neighbors; "
           "reduction ran on the data-owning shards (callback, §2.3)")
 
@@ -41,7 +45,8 @@ def main():
     rng = np.random.default_rng(5)
     o = jnp.asarray(rng.uniform(0, 1, (64, 3)).astype(np.float32))
     tgt = np.asarray(pts)[rng.integers(0, 4096, 64)]
-    t, _ = dt.query_ray_nearest(o, jnp.asarray(tgt) - o, k=1)
+    hits = dt.query(P.RayNearest(G.Rays(o, jnp.asarray(tgt) - o), 1))
+    t = hits.distances
     print(f"distributed rays: {float(jnp.isfinite(t[:, 0]).mean()):.0%} hit")
 
 

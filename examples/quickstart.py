@@ -2,15 +2,16 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Mirrors §2.1.3 of the paper: build an index over boxes, run the three
-query flavors, then a kNN and a brute-force cross-check.
+Mirrors §2.1.3 of the paper through the unified Index protocol
+(DESIGN.md §6): build an index over values, run the three query flavors
+via the ONE polymorphic ``query()``, then a kNN and a brute-force
+cross-check — BruteForce answers the very same calls.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import BVH, BruteForce, geometry as G, intersects, nearest
-from repro.core import callbacks as CB
+from repro.core import (BVH, BruteForce, ExecutionPolicy, geometry as G,
+                        intersects, nearest)
 
 
 def main():
@@ -18,41 +19,42 @@ def main():
     num_boxes, num_queries = 2000, 100
 
     # -- create the "View" of boxes and build the index (§2.1.3) ---------
+    # (values, indexable_getter, policy) — the execution space of API v1
+    # became the explicit ExecutionPolicy bound at construction
     lo = rng.uniform(0, 1, (num_boxes, 3)).astype(np.float32)
     boxes = G.Boxes(jnp.asarray(lo), jnp.asarray(lo + 0.02))
-    space = None                      # execution space (default stream)
-    tree = BVH(space, boxes)
+    tree = BVH(boxes, policy=ExecutionPolicy())
     print(f"index: size={tree.size()} bounds={np.asarray(tree.bounds().lo)[0]}"
           f"..{np.asarray(tree.bounds().hi)[0]}")
 
     # -- spatial query, storage flavor (3): values + offsets CSR ---------
     centers = jnp.asarray(rng.uniform(0, 1, (num_queries, 3)).astype(np.float32))
     queries = intersects(G.Spheres(centers, jnp.full((num_queries,), 0.1)))
-    values, indices, offsets = tree.query(space, queries)
-    print(f"storage query: {int(offsets[-1])} total matches; "
-          f"query 0 -> {int(offsets[1] - offsets[0])} boxes")
+    res = tree.query(queries)                   # QueryResult NamedTuple
+    print(f"storage query: {int(res.offsets[-1])} total matches; "
+          f"query 0 -> {int(res.offsets[1] - res.offsets[0])} boxes")
 
     # -- pure callback flavor (1): reduce without storing (§2.2) ---------
     def mean_center_cb(state, pred, value, index, t):
         s, c = state
         return (s + 0.5 * (value.lo + value.hi), c + 1), jnp.bool_(False)
 
-    s0 = (jnp.zeros((num_queries, 3)), jnp.zeros((num_queries,), jnp.int32))
-    (sums, counts) = tree.query_callback(space, queries, mean_center_cb, s0)
+    s0 = (jnp.zeros((3,)), jnp.int32(0))        # unbatched; broadcast per query
+    (sums, counts) = tree.query(queries, callback=(mean_center_cb, s0))
     print("callback query: mean matched-box center of query 0 =",
           np.asarray(sums[0] / jnp.maximum(counts[0], 1)))
 
     # -- callback with output flavor (2) ----------------------------------
-    out, off = tree.query_out(space, queries,
-                              lambda p, v, i, t: jnp.sum(v.hi - v.lo))
-    print(f"query_out: first stored output = {float(out[0]):.4f}")
+    out = tree.query(queries, out=lambda p, v, i, t: jnp.sum(v.hi - v.lo))
+    print(f"output query: first stored output = {float(out.values[0]):.4f}")
 
     # -- kNN (fine distances, §2.1.2) + brute-force cross-check ----------
+    # the SAME query() call served by the other index structure
     knn_q = nearest(G.Points(centers), k=5)
-    d_tree, i_tree = tree.knn(space, knn_q)
-    d_brute, i_brute = BruteForce(space, boxes).knn(space, knn_q)
+    r_tree = tree.query(knn_q)
+    r_brute = BruteForce(boxes).query(knn_q)
     print("kNN matches brute force:",
-          bool(jnp.allclose(d_tree, d_brute, atol=1e-5)))
+          bool(jnp.allclose(r_tree.distances, r_brute.distances, atol=1e-5)))
 
 
 if __name__ == "__main__":

@@ -21,7 +21,7 @@ def main():
     b = a + rng.uniform(-0.03, 0.03, (n, 3)).astype(np.float32)
     c = a + rng.uniform(-0.03, 0.03, (n, 3)).astype(np.float32)
     tris = G.Triangles(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c))
-    bvh = BVH(None, tris)
+    bvh = BVH(tris)
 
     # orthographic camera looking straight down
     res = 32
@@ -39,9 +39,8 @@ def main():
     hp = o + d * np.minimum(t, 10)[:, None] - d * 1e-3
     ld = np.tile([0.3, 0.2, 1.0], (res * res, 1)).astype(np.float32)
     sh_rays = P.RayIntersect(G.Rays(jnp.asarray(hp), jnp.asarray(ld)))
-    cb, s0 = CB.count_with_limit(1)
-    s0 = jnp.broadcast_to(s0, (res * res,))
-    blocked = np.asarray(bvh.query_callback(None, sh_rays, cb, s0)) > 0
+    blocked = np.asarray(
+        bvh.query(sh_rays, callback=CB.count_with_limit(1))) > 0
 
     shades = np.where(~hit, " ", np.where(blocked, "░", "█"))
     for r in shades.reshape(res, res)[::2]:

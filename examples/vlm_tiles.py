@@ -31,11 +31,10 @@ def tile_boxes():
 
 def select_grid(width, height):
     boxes, grid_id = tile_boxes()
-    tree = BVH(None, boxes)
+    tree = BVH(boxes)
     img = intersects(G.Boxes(jnp.asarray([[0.0, 0.0]], jnp.float32),
                              jnp.asarray([[width, height]], jnp.float32)))
-    _, idx, _ = tree.query(None, img)
-    touched = np.asarray(idx)
+    touched = np.asarray(tree.query(img).indices)
     # pick the grid with max coverage and min waste
     best, best_score = None, -1e18
     for gid, (gy, gx) in enumerate(GRIDS):

@@ -14,4 +14,8 @@ else
 fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -q -p no:cacheprovider "$@"
+# DeprecationWarnings are errors: the legacy API-v1 spellings (space-first
+# query/count/knn, DistributedTree query_knn-style methods) are warn-once
+# shims, so any in-repo call site that sneaks back in fails tier-1 here.
+exec python -m pytest -q -p no:cacheprovider \
+    -W error::DeprecationWarning "$@"

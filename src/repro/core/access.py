@@ -26,6 +26,8 @@ def as_geometry(obj):
     arr = jnp.asarray(obj)
     if arr.ndim == 2:
         return G.Points(arr)  # (N, dim) raw coordinates
+    if arr.ndim == 1:
+        return G.Points(arr[None, :])  # a single (dim,) coordinate vector
     raise TypeError(f"cannot adapt {type(obj).__name__} to a geometry array; "
                     "use register_access()")
 

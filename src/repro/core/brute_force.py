@@ -1,5 +1,5 @@
 """Brute-force search index (ArborX 2.0 §1: "New brute-force search
-structure").
+structure"), an :class:`~repro.core.index.Index` — drop-in for BVH.
 
 On GPU ArborX tiles all-pairs tests over thread blocks. On TPU this
 structure is *more* attractive than on GPU (DESIGN.md §2): the pairwise
@@ -15,18 +15,19 @@ The pure-JAX implementation below tiles queries into blocks of `block_q` so
 the (Q, N) distance matrix never materializes. The Pallas kernel variant
 (repro.kernels.bruteforce_knn) additionally tiles N into VMEM-resident
 panels with a streaming top-k merge.
+
+Exact by construction — serves as the oracle for the BVH in tests.
 """
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from . import geometry as G
 from . import predicates as P
-from .access import as_geometry, default_indexable_getter
-from .traversal import value_at, tree_select
+from .access import default_indexable_getter
+from .index import ExecutionPolicy, Index, QueryResult, _warn_deprecated
+from .traversal import tree_select, value_at
 
 __all__ = ["BruteForce", "pairwise_sq_distances"]
 
@@ -39,32 +40,43 @@ def pairwise_sq_distances(x: jax.Array, y: jax.Array) -> jax.Array:
     return jnp.maximum(x2 - 2.0 * xy + y2, 0.0)
 
 
-class BruteForce:
-    """API-v2 compatible brute-force index (drop-in for BVH).
+class BruteForce(Index):
+    """Stores values; queries evaluate the predicate against every value."""
 
-    Stores values; queries evaluate the predicate against every value.
-    Exact by construction — serves as the oracle for the BVH in tests.
-    """
-
-    def __init__(self, space, values, indexable_getter=default_indexable_getter,
-                 *, block_q: int = 256):
-        self.space = space
+    def __init__(self, values, indexable_getter=default_indexable_getter,
+                 *_legacy, policy: ExecutionPolicy | None = None,
+                 block_q: int = 256):
+        from .bvh import _is_legacy_space
+        if _is_legacy_space(values):
+            _warn_deprecated(
+                "BruteForce.__init__", "BruteForce(space, values, ...) is "
+                "deprecated; use BruteForce(values, indexable_getter=..., "
+                "policy=ExecutionPolicy(device=space))")
+            space, values = values, indexable_getter
+            indexable_getter = _legacy[0] if _legacy else default_indexable_getter
+            policy = (policy or ExecutionPolicy()).override(device=space)
+        elif _legacy:
+            raise TypeError("BruteForce() takes at most 2 positional "
+                            "arguments (values, indexable_getter)")
+        self.policy = policy or ExecutionPolicy()
         self.values = values
+        self._getter = indexable_getter
         self._boxes = indexable_getter(values)
         self._n = len(self._boxes)
         self._block_q = block_q
 
+    @property
+    def space(self):
+        return self.policy.device
+
     def size(self) -> int:
         return self._n
-
-    def empty(self) -> bool:
-        return self._n == 0
 
     def bounds(self) -> G.Boxes:
         return G.merge_boxes(self._boxes)
 
-    # -- query flavor (1): pure callback ----------------------------------
-    def query_callback(self, space, predicates, callback, init_state):
+    # --- backend SPI ------------------------------------------------------
+    def _query_callback_impl(self, predicates, callback, state0, pol):
         """Apply `callback` on every match, in index order per query."""
         values = self.values
         n = self._n
@@ -83,10 +95,18 @@ class BruteForce:
             st, _ = jax.lax.fori_loop(0, n, body, (st, jnp.bool_(False)))
             return st
 
-        return jax.vmap(one)(predicates, init_state)
+        return jax.vmap(one)(predicates, state0)
 
-    # -- query flavor (3): storage (CSR) ----------------------------------
-    def query(self, space, predicates, capacity: int | None = None):
+    def _count_impl(self, predicates, pol):
+        return self._match_matrix(predicates).sum(-1).astype(jnp.int32)
+
+    def _csr_exact(self, predicates, pol):
+        """One-pass exact CSR from the (Q, N) match matrix (the two-pass
+        count->fill would build the matrix twice). Also serves
+        RayIntersect: its match set is the hit test, same row-major
+        ordering semantics."""
+        if not isinstance(predicates, (P.Intersects, P.RayIntersect)):
+            return None
         mask = self._match_matrix(predicates)            # (Q, N) bool
         counts = mask.sum(-1).astype(jnp.int32)
         offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
@@ -94,40 +114,69 @@ class BruteForce:
         total = int(offsets[-1])
         qid, idx = jnp.nonzero(mask, size=total, fill_value=0)
         # nonzero is row-major -> already CSR-ordered by query
-        values_out = value_at(self.values, idx.astype(jnp.int32))
-        return values_out, idx.astype(jnp.int32), offsets
+        idx = idx.astype(jnp.int32)
+        return QueryResult(values=value_at(self.values, idx), indices=idx,
+                           offsets=offsets)
 
-    def count(self, space, predicates):
-        return self._match_matrix(predicates).sum(-1).astype(jnp.int32)
+    def _fill_impl(self, predicates, capacity, pol):
+        """The ``collect_hits`` contract from the match matrix: full counts
+        plus the first `capacity` matched indices per query (index order)."""
+        mask = self._match_matrix(predicates)            # (Q, N) bool
+        counts = mask.sum(-1).astype(jnp.int32)
+        n = mask.shape[1]
+        key = jnp.where(mask, jnp.arange(n, dtype=jnp.int32)[None, :], n)
+        first = jax.lax.sort(key, dimension=1)[:, :capacity]
+        buf = jnp.where(first < n, first, -1).astype(jnp.int32)
+        return counts, buf
 
-    # -- nearest ------------------------------------------------------------
-    def knn(self, space, predicates):
-        """(dists, idxs): (Q, k) exact k-nearest by fine distance."""
+    def _knn_impl(self, predicates, pol):
+        """(dists, idxs): (Q, k) exact k-nearest by fine distance. Ray
+        predicates rank by hit parameter t; misses come back (-1, inf),
+        matching the traversal path."""
+        import dataclasses
         k = predicates.k
+        exclude = getattr(predicates, "exclude", None)
+        if exclude is not None:
+            predicates = dataclasses.replace(predicates, exclude=None)
         d = self._distance_matrix(predicates)            # (Q, N)
+        if exclude is not None:
+            ex_q, leaf_l = exclude
+            d = jnp.where(leaf_l[None, :] == ex_q[:, None], jnp.inf, d)
         k_eff = min(k, self._n)
         neg_top, idx = jax.lax.top_k(-d, k_eff)
         dists = -neg_top
+        idx = idx.astype(jnp.int32)
         if k_eff < k:
             pad_d = jnp.full((d.shape[0], k - k_eff), jnp.inf, d.dtype)
             pad_i = jnp.full((d.shape[0], k - k_eff), -1, jnp.int32)
             dists = jnp.concatenate([dists, pad_d], -1)
-            idx = jnp.concatenate([idx.astype(jnp.int32), pad_i], -1)
-        return dists, idx.astype(jnp.int32)
+            idx = jnp.concatenate([idx, pad_i], -1)
+        # non-matches (ray misses, excluded leaves) carry d=inf: blank them
+        idx = jnp.where(jnp.isinf(dists), -1, idx)
+        return dists, idx
 
     # -- internals -----------------------------------------------------------
     def _match_matrix(self, predicates):
-        """(Q, N) bool, blocked over queries to bound memory."""
+        """(Q, N) bool, blocked over queries to bound memory. Ray
+        predicates match where the exact hit test succeeds."""
         values = self.values
+        is_ray = isinstance(predicates, (P.RayNearest, P.RayIntersect,
+                                         P.RayOrderedIntersect))
+
+        def test(p):
+            if is_ray:
+                hit, _ = P.leaf_ray_hit(p, values)
+                return hit
+            return P.leaf_match_test(p, values)
 
         def block(pred_blk):
-            return jax.vmap(lambda p: P.leaf_match_test(p, values))(pred_blk)
+            return jax.vmap(test)(pred_blk)
 
         return _map_query_blocks(block, predicates, self._block_q)
 
     def _distance_matrix(self, predicates):
         values = self.values
-        g = predicates.geom
+        g = getattr(predicates, "geom", None)
         if isinstance(g, G.Points) and isinstance(values, G.Points):
             # fast path: MXU expansion
             return jnp.sqrt(pairwise_sq_distances(g.coords, values.coords))

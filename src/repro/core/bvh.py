@@ -1,26 +1,22 @@
-"""ArborX API v2 ``BVH`` (§2.1.3).
+"""ArborX API v2 ``BVH`` (§2.1.3), an :class:`~repro.core.index.Index`.
 
 The C++ template parameters map to Python as:
-  MemorySpace      -> JAX device / sharding (arrays carry their placement)
+  MemorySpace      -> JAX device (``ExecutionPolicy.device``)
   Value            -> any pytree-of-arrays container ("values")
   IndexableGetter  -> callable values -> Boxes (bounding volumes)
   BoundingVolume   -> AABB (k-DOP support via indexable getters that return
                       enlarged boxes; the traversal only needs lo/hi)
 
-Execution spaces: the ``space`` argument accepts None (default stream) or a
-jax.Device. Like Kokkos execution-space instances, passing distinct devices
-lets independent searches run concurrently; on a single device XLA's async
-dispatch already overlaps compute — there is no global fence in this API.
-
-Three query flavors (§2.1.3):
-  (1) query_callback: pure callback, nothing stored
-  (2) query_out:      callback produces per-match output values, stored CSR
-  (3) query:          store matched values + offsets (CSR), like API v1 but
-                      returning *values*, not indices (plus indices too).
+Construction is ``BVH(values, indexable_getter=..., policy=...)``; the
+API v1 per-call execution-space argument is absorbed into the policy.
+All query flavors go through the inherited polymorphic
+:meth:`~repro.core.index.Index.query`; this class only implements the
+backend SPI — engine-dispatched count/fill/kNN plus the N < 2 linear-scan
+fallbacks.
 """
 from __future__ import annotations
 
-from functools import partial
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -31,52 +27,72 @@ from . import geometry as G
 from . import lbvh
 from . import predicates as P
 from . import traversal as T
-from .access import as_geometry, default_indexable_getter
+from .access import default_indexable_getter
+from .index import ExecutionPolicy, Index, QueryResult, _bcast_state, _warn_deprecated
 
 __all__ = ["BVH", "QueryResult"]
 
-
-class QueryResult(tuple):
-    """The storage query's ``(values, indices, offsets)`` triple.
-
-    Unpacks like a plain 3-tuple (the API-v1-compatible spelling) but also
-    carries ``overflow``: True when a caller-supplied capacity was exceeded
-    even after the doubling retries, i.e. the CSR result is truncated.
-    """
-
-    def __new__(cls, triple, overflow: bool = False):
-        obj = super().__new__(cls, triple)
-        obj.overflow = overflow
-        return obj
+_DEVICE_TYPES = (jax.Device,) if hasattr(jax, "Device") else ()
 
 
-class BVH:
-    def __init__(self, space, values, indexable_getter=default_indexable_getter,
-                 *, bits: int = 64, refit: str = "rmq", engine=None):
-        self._init_common(space, values, indexable_getter, engine)
+def _is_legacy_space(arg):
+    """The API v1 constructors took (space, values, ...): a leading None or
+    jax.Device marks the old spelling (new-style values are never None)."""
+    return arg is None or (bool(_DEVICE_TYPES)
+                           and isinstance(arg, _DEVICE_TYPES))
+
+
+class BVH(Index):
+    def __init__(self, values, indexable_getter=default_indexable_getter,
+                 *_legacy, policy: ExecutionPolicy | None = None, engine=None,
+                 bits: int = 64, refit: str = "rmq"):
+        if _is_legacy_space(values):
+            _warn_deprecated(
+                "BVH.__init__", "BVH(space, values, ...) is deprecated; "
+                "use BVH(values, indexable_getter=..., policy="
+                "ExecutionPolicy(device=space))")
+            space, values = values, indexable_getter
+            indexable_getter = _legacy[0] if _legacy else default_indexable_getter
+            policy = (policy or ExecutionPolicy()).override(device=space)
+        elif _legacy:
+            raise TypeError("BVH() takes at most 2 positional arguments "
+                            "(values, indexable_getter)")
+        self._init_common(values, indexable_getter, policy, engine)
         if self._n >= 2:
             self.tree = lbvh.build(self._boxes, bits=bits, refit=refit)
-            if space is not None:
-                self.tree = jax.device_put(self.tree, space)
+            if self.policy.device is not None:
+                self.tree = jax.device_put(self.tree, self.policy.device)
         else:
             self.tree = None  # degenerate; queries fall back to linear scan
 
     @classmethod
-    def from_tree(cls, space, values, tree,
-                  indexable_getter=default_indexable_getter, *, engine=None):
+    def from_tree(cls, values, tree, indexable_getter=default_indexable_getter,
+                  *_legacy, policy: ExecutionPolicy | None = None, engine=None):
         """Wrap an existing LBVH over (possibly moved) values without
         rebuilding — the swap-in constructor for ``lbvh.refit`` output.
         The caller guarantees `tree` bounds `indexable_getter(values)`."""
+        if _is_legacy_space(values):
+            _warn_deprecated(
+                "BVH.from_tree", "BVH.from_tree(space, values, tree) is "
+                "deprecated; use BVH.from_tree(values, tree, policy=...)")
+            space, values, tree = values, tree, indexable_getter
+            indexable_getter = _legacy[0] if _legacy else default_indexable_getter
+            policy = (policy or ExecutionPolicy()).override(device=space)
+        elif _legacy:
+            raise TypeError("BVH.from_tree() takes at most 3 positional "
+                            "arguments (values, tree, indexable_getter)")
         obj = cls.__new__(cls)
-        obj._init_common(space, values, indexable_getter, engine)
-        obj.tree = tree if space is None else jax.device_put(tree, space)
+        obj._init_common(values, indexable_getter, policy, engine)
+        obj.tree = tree if obj.policy.device is None else \
+            jax.device_put(tree, obj.policy.device)
         return obj
 
-    def _init_common(self, space, values, indexable_getter, engine):
-        self.space = space
+    def _init_common(self, values, indexable_getter, policy, engine):
+        self.policy = policy or ExecutionPolicy()
+        if engine is not None:
+            self.policy = self.policy.override(engine=engine)
         self.values = values
         self._getter = indexable_getter
-        self._engine = engine if engine is not None else E.default_engine()
         boxes = indexable_getter(values)
         self._n = len(boxes)
         self._boxes = boxes
@@ -87,19 +103,25 @@ class BVH:
             and isinstance(values, (G.Points, G.Boxes)))
         self._bf = None
 
+    @property
+    def space(self):
+        """API v1 compatibility alias for ``policy.device``."""
+        return self.policy.device
+
+    @property
+    def _engine(self):
+        return self.policy.resolve_engine()
+
     def _brute(self):
         """Lazy MXU-path sibling index over the same values (engine route)."""
         if self._bf is None:
             from .brute_force import BruteForce
-            self._bf = BruteForce(self.space, self.values, self._getter)
+            self._bf = BruteForce(self.values, self._getter, policy=self.policy)
         return self._bf
 
     # --- container interface (§2.1.3) -----------------------------------
     def size(self) -> int:
         return self._n
-
-    def empty(self) -> bool:
-        return self._n == 0
 
     def bounds(self) -> G.Boxes:
         if self.tree is None:
@@ -107,140 +129,77 @@ class BVH:
                 jnp.zeros((1, 0)), jnp.zeros((1, 0)))
         return G.Boxes(self.tree.node_lo[:1], self.tree.node_hi[:1])
 
-    # --- query flavor (1): pure callback --------------------------------
-    def query_callback(self, space, predicates, callback, init_state):
-        """Execute `callback` on every match; return per-query final states."""
+    # --- backend SPI ------------------------------------------------------
+    def _query_callback_impl(self, predicates, callback, state0, pol):
         if self.tree is None:
             return _degenerate_callback(self.values, self._boxes, self._n,
-                                        predicates, callback, init_state)
-        return T.traverse(self.tree, self.values, predicates, callback, init_state)
+                                        predicates, callback, state0)
+        return T.traverse(self.tree, self.values, predicates, callback, state0)
 
-    # --- query flavor (3): storage query (CSR) ---------------------------
-    def query(self, space, predicates, capacity: int | None = None, *,
-              max_doublings: int = 6):
-        """Returns QueryResult (values_out, indices, offsets) in CSR layout.
-
-        Two-pass: count -> exclusive scan -> fill, the same structure ArborX
-        uses internally. If `capacity` (max matches per query) is given the
-        *fill* is jit-compatible at that width; when the guess is low the
-        buffer is re-filled at doubled capacity (up to `max_doublings`
-        times) instead of silently truncating. ``result.overflow`` is True
-        iff truncation remains after the capped retries.
-        """
-        nq = len(predicates)
-        overflow = False
-        if capacity is None:
-            if (self.tree is not None
-                    and self._engine.route_spatial(self, predicates)
-                    == E.ROUTE_BRUTEFORCE):
-                # unclamped + brute-force route: one-pass CSR (the two-pass
-                # count->fill would run the (Q, N) match matrix twice)
-                return QueryResult(self._brute().query(space, predicates))
-            counts = self.count(space, predicates)
-            capacity = max(int(counts.max()), 1) if nq else 1
-            counts, idx_buf = self._fill(predicates, capacity)
-        else:
-            counts, idx_buf = self._fill(predicates, capacity)
-            # counts are FULL counts (the fill pass only clamps the buffer),
-            # so one host sync decides the retry capacity outright
-            needed = int(counts.max()) if nq else 0
-            if needed > capacity:
-                retry = capacity
-                for _ in range(max_doublings):
-                    if retry >= needed:
-                        break
-                    retry *= 2
-                if retry > capacity:
-                    counts, idx_buf = self._fill(predicates, retry)
-                    capacity = retry
-                overflow = needed > capacity
-        offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
-                                   jnp.cumsum(jnp.minimum(counts, capacity))]).astype(jnp.int32)
-        total = int(offsets[-1])
-        flat_idx = _csr_pack(idx_buf, jnp.minimum(counts, capacity), offsets, total)
-        values_out = T.value_at(self.values, flat_idx)
-        return QueryResult((values_out, flat_idx, offsets), overflow)
-
-    # --- query flavor (2): callback with output --------------------------
-    def query_out(self, space, predicates, out_fn, capacity: int | None = None):
-        """`out_fn(pred, value, index, t) -> output pytree element`; outputs
-        stored CSR. The output type may differ from Value (§2.1.3 flavor 2)."""
-        values_out, flat_idx, offsets = self.query(space, predicates, capacity)
-        # re-evaluate out_fn on the packed matches (cheap, vectorized);
-        # per-match t is recomputed for ray predicates during packing when
-        # needed — spatial callbacks receive t=0.
-        preds_rep = _repeat_preds(predicates, offsets, flat_idx.shape[0])
-        t = jnp.zeros((flat_idx.shape[0],), jnp.float32)
-        out = jax.vmap(out_fn)(preds_rep, values_out, flat_idx, t)
-        return out, offsets
-
-    # --- helpers ----------------------------------------------------------
-    def count(self, space, predicates):
+    def _count_impl(self, predicates, pol):
         """Per-query match counts, dispatched by the engine (DESIGN.md §3):
         MXU all-pairs, fused Pallas traversal, or the vmapped while loop.
         All three produce identical int32 counts."""
+        engine = pol.resolve_engine()
         if self.tree is not None:
-            route = self._engine.route_spatial(self, predicates)
+            route = engine.route_spatial(self, predicates)
             if route == E.ROUTE_BRUTEFORCE:
-                return self._brute().count(space, predicates)
+                return self._brute()._count_impl(predicates, pol)
             if route == E.ROUTE_PALLAS:
-                return self._engine.pallas_count(self, predicates)
+                return engine.pallas_count(self, predicates)
         cb, s0 = CB.counting()
-        s0 = _bcast_state(s0, len(predicates))
-        return self.query_callback(space, predicates, cb, s0)
+        return self._query_callback_impl(predicates, cb,
+                                         _bcast_state(s0, len(predicates)), pol)
 
-    def _fill(self, predicates, capacity):
+    def _fill_impl(self, predicates, capacity, pol):
         """(counts, idx_buf (Q, capacity)): full counts plus the first
         `capacity` matched indices per query (engine-dispatched; the match
         SET per query is path-independent, the buffer order is not)."""
+        engine = pol.resolve_engine()
         if self.tree is not None:
-            route = self._engine.route_spatial(self, predicates, capacity)
+            route = engine.route_spatial(self, predicates, capacity)
             if route == E.ROUTE_BRUTEFORCE:
-                return self._engine.bruteforce_fill(self._brute(), predicates,
-                                                    capacity)
+                return self._brute()._fill_impl(predicates, capacity, pol)
             if route == E.ROUTE_PALLAS:
-                return self._engine.pallas_fill(self, predicates, capacity)
+                return engine.pallas_fill(self, predicates, capacity)
         cb, s0 = CB.collect_hits(capacity)
-        s0 = _bcast_state(s0, len(predicates))
-        count, idxs, _ = self.query_callback(None, predicates, cb, s0)
+        count, idxs, _ = self._query_callback_impl(
+            predicates, cb, _bcast_state(s0, len(predicates)), pol)
         return count, idxs
 
-    # --- nearest (fine kNN, §2.1.2) --------------------------------------
-    def knn(self, space, predicates):
-        """For Nearest predicates: returns (dists, idxs) (N_q, k),
-        engine-dispatched like count()."""
+    def _csr_exact(self, predicates, pol):
+        """Unclamped + brute-force route: one-pass CSR (the two-pass
+        count->fill would run the (Q, N) match matrix twice)."""
+        engine = pol.resolve_engine()
+        if (self.tree is not None and isinstance(predicates, P.Intersects)
+                and engine.route_spatial(self, predicates) == E.ROUTE_BRUTEFORCE):
+            return self._brute()._csr_exact(predicates, pol)
+        return None
+
+    def _knn_impl(self, predicates, pol):
+        """(dists, idxs) (N_q, k) for Nearest / RayNearest predicates,
+        engine-dispatched like counts. Nearest.exclude (the EMST
+        component filter) pins the exact loop path."""
         k = predicates.k
+        if isinstance(predicates, P.Nearest) and predicates.exclude is not None:
+            ex_q, leaf_l = predicates.exclude
+            plain = dataclasses.replace(predicates, exclude=None)
+            if self.tree is None:
+                from .brute_force import BruteForce
+                return BruteForce(self.values, self._getter)._knn_impl(
+                    predicates, pol)
+            return T.traverse_knn(self.tree, self.values, plain, k,
+                                  exclude_labels=ex_q, leaf_labels=leaf_l)
         if self.tree is None:
-            return _degenerate_knn(self.values, self._boxes, self._n, predicates, k)
-        route = self._engine.route_knn(self, predicates)
+            return _degenerate_knn(self.values, self._boxes, self._n,
+                                   predicates, k)
+        engine = pol.resolve_engine()
+        route = engine.route_knn(self, predicates)
         if route == E.ROUTE_BRUTEFORCE:
-            return self._brute().knn(space, predicates)
+            return self._brute()._knn_impl(predicates, pol)
         if route == E.ROUTE_PALLAS:
-            return self._engine.pallas_knn(self, predicates)
+            return engine.pallas_knn(self, predicates)
         return T.traverse_knn(self.tree, self.values, predicates, k)
-
-
-def _bcast_state(state, nq):
-    return jax.tree_util.tree_map(
-        lambda a: jnp.broadcast_to(a, (nq,) + jnp.shape(a)), state)
-
-
-def _csr_pack(buf, counts, offsets, total):
-    """(Q, cap) buffer + per-query counts -> flat (total,) CSR array."""
-    q, cap = buf.shape
-    ar = jnp.arange(cap)[None, :]
-    valid = ar < counts[:, None]
-    pos = offsets[:-1][:, None] + ar
-    flat = jnp.zeros((total + 1,), buf.dtype)
-    flat = flat.at[jnp.where(valid, pos, total)].set(buf)
-    return flat[:total]
-
-
-def _repeat_preds(predicates, offsets, total):
-    """Expand per-query predicates to per-match (CSR repeat)."""
-    counts = offsets[1:] - offsets[:-1]
-    qid = jnp.repeat(jnp.arange(counts.shape[0]), counts, total_repeat_length=total)
-    return jax.tree_util.tree_map(lambda a: a[qid], predicates)
 
 
 # --- degenerate N in {0, 1}: linear scan ---------------------------------
@@ -264,5 +223,7 @@ def _degenerate_knn(values, boxes, n, predicates, k):
             return dists, idxs
         val = T.value_at(values, 0)
         d = P.leaf_distance(pred, T._as_batch1(val))[0]
-        return dists.at[0].set(d), idxs.at[0].set(0)
+        hit = jnp.isfinite(d)
+        return (dists.at[0].set(d),
+                idxs.at[0].set(jnp.where(hit, jnp.int32(0), jnp.int32(-1))))
     return jax.vmap(one)(predicates)

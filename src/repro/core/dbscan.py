@@ -31,37 +31,34 @@ import jax.numpy as jnp
 from . import callbacks as CB
 from . import geometry as G
 from . import predicates as P
-from . import traversal as T
-from .lbvh import build as lbvh_build
+from .bvh import BVH
 
 __all__ = ["dbscan", "core_points", "relabel_compact"]
 
 _BIG = jnp.int32(2**31 - 1)
 
 
-def core_points(tree, pts: G.Points, eps: float, min_pts: int) -> jax.Array:
+def core_points(index: BVH, pts: G.Points, eps: float, min_pts: int) -> jax.Array:
     """(N,) bool: has >= min_pts neighbors within eps (self included),
-    using early-terminating counting (§2.2 + §2.6)."""
+    using early-terminating counting (§2.2 + §2.6) through the unified
+    callback-flavored query."""
     n = len(pts)
     preds = P.intersects(G.Spheres(pts.coords, jnp.full((n,), eps, pts.coords.dtype)))
-    cb, s0 = CB.count_with_limit(min_pts)
-    s0 = jnp.broadcast_to(s0, (n,))
-    counts = T.traverse(tree, pts, preds, cb, s0)
+    counts = index.query(preds, callback=CB.count_with_limit(min_pts))
     return counts >= min_pts
 
 
-def _min_core_label_round(tree, pts, eps, is_core, labels):
+def _min_core_label_round(index, pts, eps, is_core, labels):
     """One propagation round: for every point, the min label among core
     neighbors within eps (BIG when none)."""
     n = len(pts)
     preds = P.intersects(G.Spheres(pts.coords, jnp.full((n,), eps, pts.coords.dtype)))
 
-    def cb(state, pred, value, index, t):
-        cand = jnp.where(is_core[index], labels[index], _BIG)
+    def cb(state, pred, value, index_, t):
+        cand = jnp.where(is_core[index_], labels[index_], _BIG)
         return jnp.minimum(state, cand), jnp.bool_(False)
 
-    s0 = jnp.full((n,), _BIG)
-    return T.traverse(tree, pts, preds, cb, s0)
+    return index.query(preds, callback=(cb, _BIG))
 
 
 def _pointer_jump(labels):
@@ -83,14 +80,13 @@ def _pointer_jump(labels):
 def _dbscan_impl(coords, eps, min_pts: int, cell_label, cell_core, dense_box: bool):
     pts = G.Points(coords)
     n = coords.shape[0]
-    boxes = G.Boxes(coords, coords)
-    tree = lbvh_build(boxes)
+    index = BVH(pts)
 
     if dense_box:
-        is_core = cell_core | core_points(tree, pts, eps, min_pts)
+        is_core = cell_core | core_points(index, pts, eps, min_pts)
         labels0 = jnp.where(is_core, cell_label, _BIG)
     else:
-        is_core = core_points(tree, pts, eps, min_pts)
+        is_core = core_points(index, pts, eps, min_pts)
         labels0 = jnp.where(is_core, jnp.arange(n, dtype=jnp.int32), _BIG)
 
     # hook + jump until fixpoint over CORE points
@@ -100,7 +96,7 @@ def _dbscan_impl(coords, eps, min_pts: int, cell_label, cell_core, dense_box: bo
 
     def body(c):
         labels, _ = c
-        m = _min_core_label_round(tree, pts, eps, is_core, labels)
+        m = _min_core_label_round(index, pts, eps, is_core, labels)
         new = jnp.where(is_core, jnp.minimum(labels, m), labels)
         new = jnp.where(is_core, _pointer_jump_core(new), new)
         return new, jnp.any(new != labels)
@@ -108,7 +104,7 @@ def _dbscan_impl(coords, eps, min_pts: int, cell_label, cell_core, dense_box: bo
     labels, _ = jax.lax.while_loop(cond, body, (labels0, jnp.bool_(True)))
 
     # border points: min core-neighbor label; noise: -1
-    border = _min_core_label_round(tree, pts, eps, is_core, labels)
+    border = _min_core_label_round(index, pts, eps, is_core, labels)
     labels = jnp.where(is_core, labels, border)
     labels = jnp.where(labels == _BIG, jnp.int32(-1), labels)
     return labels, is_core

@@ -1,4 +1,5 @@
-"""DistributedTree (§2.3): distributed search over a mesh axis.
+"""DistributedTree (§2.3): distributed search over a mesh axis, an
+:class:`~repro.core.index.Index`.
 
 ArborX's ``DistributedTree`` takes an ``MPI_Comm``; the SPMD analogue here
 is a (mesh, axis) pair — ranks become shards of the named mesh axis and
@@ -6,144 +7,192 @@ two-sided MPI becomes ``jax.lax`` collectives inside ``shard_map``
 (DESIGN.md §2). "GPU-aware MPI" needs no emulation: ICI collectives never
 stage through host memory.
 
+API v2 surface: construction takes ``(mesh, axis, values,
+indexable_getter=..., policy=...)`` — values are any pytree of arrays
+(leading axis N, divisible by the shard count) — and queries are REAL
+predicate pytrees through the inherited polymorphic ``query()``, exactly
+as for BVH/BruteForce. A raw (N, dim) coordinate array is adapted to
+``Points`` by the access traits when the default getter is used.
+
 Structure (mirrors the paper):
-  * each shard builds a LOCAL search index (LBVH) over its block of data;
+  * each shard builds a LOCAL search index (LBVH) over its block of
+    values' bounding boxes;
   * a TOP index of per-shard scene bounds is replicated everywhere (R
     boxes, R = shard count — a linear scan over R boxes plays the role of
     ArborX's top tree, exact for the R <= 64 meshes we target);
   * queries originate on their owning shard, travel to shards whose top
-    box they may touch (all-gather of the query batch — the roundtrip-
-    minimal pattern for dense query sets), are answered against local
-    data, and the per-shard partial results return to the originating
-    shard via ``all_to_all``;
+    box they may touch (all-gather of the predicate batch — the
+    roundtrip-minimal pattern for dense query sets), are answered against
+    local data, and the per-shard partial results return to the
+    originating shard via ``all_to_all``;
   * CALLBACKS RUN ON THE DATA-OWNING SHARD (§2.3's headline feature): only
     the reduced callback state crosses the interconnect, never the stored
-    values. ``benchmarks/bench_distributed.py`` measures the collective-
-    byte saving straight from the lowered HLO.
+    values. Correspondingly ``QueryResult.values`` is None here — reduce
+    data-side with ``callback=`` instead of shipping values.
+    ``benchmarks/bench_distributed.py`` measures the collective-byte
+    saving straight from the lowered HLO.
 
-All methods are jit/shard_map-closed: shapes are static, results land
-sharded over the same axis as the originating queries.
+All paths are jit/shard_map-closed: shapes are static, results land
+sharded over the same axis as the originating predicates (whose batch
+length must divide evenly by the shard count).
+
+Not supported distributed: ``RayOrderedIntersect`` (its collect state
+cannot psum across shards), flavor-2 output queries (values stay remote),
+and ``Nearest.exclude`` — all raise ``NotImplementedError``.
 """
 from __future__ import annotations
 
-from functools import partial
+import dataclasses
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+import numpy as np
+from jax.sharding import PartitionSpec as PS
 
 from repro.compat import shard_map
 
+from . import callbacks as CB
 from . import geometry as G
 from . import predicates as Pred
 from . import traversal as T
+from .access import as_geometry, default_indexable_getter
+from .index import ExecutionPolicy, Index, _bcast_state, _warn_deprecated
 from .lbvh import build as lbvh_build
 
-__all__ = ["DistributedTree"]
+__all__ = ["DistributedTree", "ship_values_baseline"]
 
 
-class DistributedTree:
-    """Distributed BVH over points sharded along ``axis`` of ``mesh``.
+def _all_gather_tree(pytree, axis):
+    return jax.tree_util.tree_map(
+        lambda a: jax.lax.all_gather(a, axis, tiled=True), pytree)
 
-    coords: (N, dim) global; N must divide evenly by the axis size.
+
+class DistributedTree(Index):
+    """Distributed BVH over values sharded along ``axis`` of ``mesh``.
+
+    values: pytree of arrays with leading axis N; N must divide evenly by
+    the shard count, with at least 2 values per shard.
     """
 
-    def __init__(self, mesh, axis: str, coords):
+    def __init__(self, mesh, axis: str, values,
+                 indexable_getter=default_indexable_getter, *,
+                 policy: ExecutionPolicy | None = None):
         self.mesh = mesh
         self.axis = axis
+        self.policy = policy or ExecutionPolicy()
+        if (indexable_getter is default_indexable_getter
+                and isinstance(values, (jax.Array, np.ndarray))):
+            # adapt raw (N, dim) coordinate arrays through the access traits
+            # so leaf tests see a geometry container
+            values = as_geometry(jnp.asarray(values))
+        self.values = values
+        self._getter = indexable_getter
+        boxes = indexable_getter(values)
         self.R = mesh.shape[axis]
-        n, dim = coords.shape
+        n = len(boxes)
+        self.dim = boxes.dim
         if n % self.R:
             raise ValueError(f"N={n} not divisible by shard count {self.R}")
         self.n_local = n // self.R
-        self.dim = dim
+        if self.n_local < 2:
+            raise ValueError(
+                f"DistributedTree needs >= 2 values per shard (got N={n} "
+                f"over {self.R} shards); use BVH for degenerate sizes")
 
-        def build_local(c):  # c: (n_local, dim)
-            tree = lbvh_build(G.Boxes(c, c))
-            top_lo = tree.node_lo[:1]          # local scene bounds
-            top_hi = tree.node_hi[:1]
-            return tree, (top_lo, top_hi), c
+        def build_local(vals_local):
+            tree = lbvh_build(indexable_getter(vals_local))
+            return tree, (tree.node_lo[:1], tree.node_hi[:1])
 
-        spec = P(axis)
+        spec = PS(axis)
         built = jax.jit(shard_map(
             build_local, mesh=mesh, in_specs=(spec,),
-            out_specs=(spec, (spec, spec), spec), check_vma=False))(coords)
-        self.trees, (self.top_lo, self.top_hi), self.coords = built
+            out_specs=(spec, (spec, spec)), check_vma=False))(values)
+        self.trees, (self.top_lo, self.top_hi) = built
         # self.trees: pytree whose arrays are shard-concatenated local trees
         # self.top_lo/hi: (R, dim) replicated-by-construction top boxes
 
-    # ------------------------------------------------------------------
-    def _local_tree(self, trees):
-        """Inside shard_map the leading axis of every tree array is the
-        local block; nothing to do but pass through."""
-        return trees
+    # --- container interface ---------------------------------------------
+    def size(self) -> int:
+        return self.R * self.n_local
 
-    # ------------------------------------------------------------------
-    def query_knn(self, queries, k: int):
-        """k nearest points for (Q, dim) queries (sharded over axis).
+    def bounds(self) -> G.Boxes:
+        return G.Boxes(jnp.min(self.top_lo, axis=0, keepdims=True),
+                       jnp.max(self.top_hi, axis=0, keepdims=True))
 
-        Returns (dists, global_idx): (Q, k), sharded like the queries.
-        """
+    # --- helpers ----------------------------------------------------------
+    def _check_q(self, predicates):
+        # Q == 0 short-circuits in every hook: XLA forbids zero-length
+        # all_gather dims, and there is nothing to communicate anyway
+        nq = len(predicates)
+        if nq % self.R:
+            raise ValueError(f"predicate batch Q={nq} not divisible by "
+                             f"shard count {self.R}")
+        return nq
+
+    def _shard_call(self, step, *operands, n_out: int):
+        spec = PS(self.axis)
+        out_specs = spec if n_out == 1 else (spec,) * n_out
+        return jax.jit(shard_map(
+            step, mesh=self.mesh, in_specs=(spec,) * (2 + len(operands)),
+            out_specs=out_specs, check_vma=False))(
+                self.trees, self.values, *operands)
+
+    # --- backend SPI ------------------------------------------------------
+    def _knn_impl(self, predicates, pol):
+        """Nearest / RayNearest: local traversals on every shard, then the
+        per-shard candidate lists (only (R*k) scalars per query) return to
+        the originating shard and merge by distance / ray parameter."""
+        if getattr(predicates, "exclude", None) is not None:
+            raise NotImplementedError(
+                "Nearest.exclude is not supported on DistributedTree")
         axis, R, n_local = self.axis, self.R, self.n_local
+        k = predicates.k
+        if self._check_q(predicates) == 0:
+            return (jnp.zeros((0, k), jnp.float32),
+                    jnp.full((0, k), -1, jnp.int32))
 
-        def step(trees, coords_local, q_local):
-            tree = self._local_tree(trees)
-            q_all = jax.lax.all_gather(q_local, axis, tiled=True)  # (Q, dim)
-            preds = Pred.nearest(G.Points(q_all), k=k)
-            d, i = T.traverse_knn(tree, G.Points(coords_local), preds, k)
+        def step(trees, vals_local, preds_local):
+            preds_all = _all_gather_tree(preds_local, axis)
+            d, i = T.traverse_knn(trees, vals_local, preds_all, k)
             # globalize indices: shard r holds rows [r*n_local, ...)
             r = jax.lax.axis_index(axis)
             gi = jnp.where(i >= 0, i + r * n_local, -1)
             # return partial results to originating shards
-            qloc = q_local.shape[0]
-            d = d.reshape(R, qloc, k)
-            gi = gi.reshape(R, qloc, k)
-            d = jax.lax.all_to_all(d, axis, 0, 0, tiled=False)     # (R, qloc, k)
-            gi = jax.lax.all_to_all(gi, axis, 0, 0, tiled=False)
-            # merge R candidate lists per query (callbacks stayed data-side;
-            # only (R*k) scalars per query crossed the interconnect)
+            qloc = len(preds_all) // R
+            d = jax.lax.all_to_all(d.reshape(R, qloc, k), axis, 0, 0)
+            gi = jax.lax.all_to_all(gi.reshape(R, qloc, k), axis, 0, 0)
+            # merge R candidate lists per query (callbacks stayed data-side)
             d = jnp.moveaxis(d, 0, 1).reshape(qloc, R * k)
             gi = jnp.moveaxis(gi, 0, 1).reshape(qloc, R * k)
             order = jnp.argsort(d, axis=1)[:, :k]
             return (jnp.take_along_axis(d, order, 1),
                     jnp.take_along_axis(gi, order, 1))
 
-        spec = P(axis)
-        return jax.jit(shard_map(
-            step, mesh=self.mesh, in_specs=(spec, spec, spec),
-            out_specs=(spec, spec), check_vma=False))(
-                self.trees, self.coords, queries)
+        return self._shard_call(step, predicates, n_out=2)
 
-    # ------------------------------------------------------------------
-    def query_callback(self, predicates_maker, callback, state0, queries,
-                       combine=None):
+    def _query_callback_impl(self, predicates, callback, state0, pol):
         """Distributed pure-callback query (§2.3: callbacks execute on the
         shard OWNING the data; only reduced states cross the network).
 
-        predicates_maker: (Q_all, dim) array -> predicate batch.
-        callback/state0: the usual traversal callback protocol; state0 is
-        the UNBATCHED initial state.
-        combine: monoid combining per-shard states (default: elementwise
-        sum via psum when states are arithmetic pytrees).
-
-        Returns per-query combined states, sharded like `queries`.
-        """
+        ``pol.combine`` is the monoid combining per-shard states; the
+        default (None) is an elementwise psum, correct for arithmetic
+        states whose initial value is zero. Non-psum combines must be
+        idempotent in state0 (it seeds every shard)."""
         axis, R = self.axis, self.R
+        combine = pol.combine
+        if self._check_q(predicates) == 0:
+            return state0        # already batched to (0, ...)
 
-        def step(trees, coords_local, q_local):
-            tree = self._local_tree(trees)
-            q_all = jax.lax.all_gather(q_local, axis, tiled=True)
-            preds = predicates_maker(q_all)
-            nq = q_all.shape[0]
-            s0 = jax.tree_util.tree_map(
-                lambda a: jnp.broadcast_to(a, (nq,) + jnp.shape(a)), state0)
-            states = T.traverse(tree, G.Points(coords_local), preds, callback, s0)
+        def step(trees, vals_local, preds_local, s0_local):
+            preds_all = _all_gather_tree(preds_local, axis)
+            s0_all = _all_gather_tree(s0_local, axis)
+            states = T.traverse(trees, vals_local, preds_all, callback, s0_all)
             if combine is None:
                 states = jax.tree_util.tree_map(
                     lambda a: jax.lax.psum(a, axis), states)
             else:
                 gathered = jax.tree_util.tree_map(
-                    lambda a: jax.lax.all_gather(a, axis), states)  # (R, Q, ...)
+                    lambda a: jax.lax.all_gather(a, axis), states)  # (R, Q, .)
                 acc = jax.tree_util.tree_map(lambda a: a[0], gathered)
                 for r in range(1, R):
                     acc = combine(acc, jax.tree_util.tree_map(
@@ -151,88 +200,142 @@ class DistributedTree:
                 states = acc
             # each shard keeps its own queries' slice
             r = jax.lax.axis_index(axis)
-            qloc = q_local.shape[0]
+            qloc = len(preds_all) // R
             return jax.tree_util.tree_map(
-                lambda a: jax.lax.dynamic_slice_in_dim(a, r * qloc, qloc), states)
+                lambda a: jax.lax.dynamic_slice_in_dim(a, r * qloc, qloc),
+                states)
 
-        spec = P(axis)
-        return jax.jit(shard_map(
-            step, mesh=self.mesh, in_specs=(spec, spec, spec),
-            out_specs=spec, check_vma=False))(
-                self.trees, self.coords, queries)
+        return self._shard_call(step, predicates, state0, n_out=1)
 
-    # ------------------------------------------------------------------
-    def query_radius_count(self, queries, radius):
-        """Counts within `radius` for each query point — the canonical
-        psum-combined callback."""
-        import repro.core.callbacks as CB
+    def _count_impl(self, predicates, pol):
         cb, s0 = CB.counting()
+        # counting MUST psum across shards: force combine back to the
+        # default even when the bound policy carries a custom monoid
+        # (override() drops None kwargs, so spell it with replace)
+        return self._query_callback_impl(
+            predicates, cb, _bcast_state(s0, len(predicates)),
+            dataclasses.replace(pol, combine=None))
 
-        def maker(q_all):
-            nq = q_all.shape[0]
-            return Pred.intersects(G.Spheres(
-                q_all, jnp.full((nq,), radius, q_all.dtype)))
-
-        return self.query_callback(maker, cb, s0, queries)
-
-    # ------------------------------------------------------------------
-    def query_ray_nearest(self, origins, directions, k: int = 1):
-        """Distributed ray tracing, `nearest` predicate (§2.5): first-k
-        hits merged across shards by ray parameter t."""
+    def _fill_impl(self, predicates, capacity, pol):
+        """CSR fill: every shard collects up to `capacity` local matches,
+        the (R, capacity) index buffers return to the originating shard and
+        pack valid-first. Counts are FULL global counts, so the base
+        class's doubling retry guarantees no shard clamps locally once the
+        retry capacity covers the global maximum."""
         axis, R, n_local = self.axis, self.R, self.n_local
+        if self._check_q(predicates) == 0:
+            return (jnp.zeros((0,), jnp.int32),
+                    jnp.full((0, capacity), -1, jnp.int32))
 
-        def step(trees, coords_local, o_local, dvec_local):
-            tree = self._local_tree(trees)
-            o_all = jax.lax.all_gather(o_local, axis, tiled=True)
-            d_all = jax.lax.all_gather(dvec_local, axis, tiled=True)
-            preds = Pred.RayNearest(G.Rays(o_all, d_all), k)
-            t, i = T.traverse_knn(tree, G.Points(coords_local), preds, k)
-            r = jax.lax.axis_index(axis)
-            gi = jnp.where(i >= 0, i + r * n_local, -1)
-            qloc = o_local.shape[0]
-            t = jax.lax.all_to_all(t.reshape(R, qloc, k), axis, 0, 0)
-            gi = jax.lax.all_to_all(gi.reshape(R, qloc, k), axis, 0, 0)
-            t = jnp.moveaxis(t, 0, 1).reshape(qloc, R * k)
-            gi = jnp.moveaxis(gi, 0, 1).reshape(qloc, R * k)
-            order = jnp.argsort(t, axis=1)[:, :k]
-            return (jnp.take_along_axis(t, order, 1),
-                    jnp.take_along_axis(gi, order, 1))
-
-        spec = P(axis)
-        return jax.jit(shard_map(
-            step, mesh=self.mesh, in_specs=(spec,) * 4,
-            out_specs=(spec, spec), check_vma=False))(
-                self.trees, self.coords, origins, directions)
-
-    # ------------------------------------------------------------------
-    def query_values_to_origin(self, queries, radius, capacity: int):
-        """ANTI-PATTERN baseline for the §2.3 benchmark: ship up to
-        `capacity` matched VALUES (coordinates) back to the originating
-        shard instead of reducing data-side. Collective bytes scale with
-        capacity * dim — compare with query_radius_count in the HLO."""
-        import repro.core.callbacks as CB
-        axis, R, n_local = self.axis, self.R, self.n_local
-
-        def step(trees, coords_local, q_local):
-            tree = self._local_tree(trees)
-            q_all = jax.lax.all_gather(q_local, axis, tiled=True)
-            nq = q_all.shape[0]
-            preds = Pred.intersects(G.Spheres(
-                q_all, jnp.full((nq,), radius, q_all.dtype)))
+        def step(trees, vals_local, preds_local):
+            preds_all = _all_gather_tree(preds_local, axis)
+            nq = len(preds_all)
             cb, s0 = CB.collect_hits(capacity)
-            s0 = jax.tree_util.tree_map(
-                lambda a: jnp.broadcast_to(a, (nq,) + jnp.shape(a)), s0)
-            count, idxs, _ = T.traverse(tree, G.Points(coords_local), preds, cb, s0)
-            vals = coords_local[jnp.maximum(idxs, 0)]          # (Q, cap, dim)
-            vals = jnp.where((idxs >= 0)[..., None], vals, jnp.inf)
-            qloc = q_local.shape[0]
-            vals = jax.lax.all_to_all(
-                vals.reshape(R, qloc, capacity, vals.shape[-1]), axis, 0, 0)
+            s0 = _bcast_state(s0, nq)
+            count, idxs, _ = T.traverse(trees, vals_local, preds_all, cb, s0)
+            r = jax.lax.axis_index(axis)
+            gi = jnp.where(idxs >= 0, idxs + r * n_local, -1)
+            qloc = nq // R
             count = jax.lax.all_to_all(count.reshape(R, qloc), axis, 0, 0)
-            return jnp.moveaxis(vals, 0, 1), jnp.moveaxis(count, 0, 1)
+            gi = jax.lax.all_to_all(gi.reshape(R, qloc, capacity), axis, 0, 0)
+            gi = jnp.moveaxis(gi, 0, 1).reshape(qloc, R * capacity)
+            # valid-first stable pack, then clamp to the caller's capacity
+            order = jnp.argsort((gi < 0).astype(jnp.int32), axis=1,
+                                stable=True)
+            buf = jnp.take_along_axis(gi, order, 1)[:, :capacity]
+            return jnp.moveaxis(count, 0, 1).sum(1).astype(jnp.int32), buf
 
-        spec = P(axis)
-        return jax.jit(shard_map(
-            step, mesh=self.mesh, in_specs=(spec, spec, spec),
-            out_specs=(spec, spec), check_vma=False))(
-                self.trees, self.coords, queries)
+        return self._shard_call(step, predicates, n_out=2)
+
+    def _collect_with_t(self, predicates, capacity, pol):
+        raise NotImplementedError(
+            "RayOrderedIntersect is single-node only (the collect state "
+            "cannot cross shards); gather values locally or use RayNearest")
+
+    def _gather_values(self, flat_idx):
+        # values live on their owning shard; shipping them contradicts the
+        # §2.3 design — results carry global indices only
+        return None
+
+    # --- deprecation shims (the old per-kind methods) ---------------------
+    def query_knn(self, queries, k: int):
+        """DEPRECATED: use ``query(nearest(Points(queries), k))``."""
+        _warn_deprecated(
+            "DistributedTree.query_knn", "query_knn(queries, k) is "
+            "deprecated; use query(nearest(G.Points(queries), k=k)) and "
+            "read .distances/.indices")
+        res = self.query(Pred.nearest(G.Points(queries), k=k))
+        return res.distances, res.indices
+
+    def query_radius_count(self, queries, radius):
+        """DEPRECATED: use ``query(intersects(Spheres(...)),
+        callback=callbacks.counting())`` (or ``count``)."""
+        _warn_deprecated(
+            "DistributedTree.query_radius_count", "query_radius_count is "
+            "deprecated; use count(intersects(G.Spheres(centers, radii)))")
+        nq = queries.shape[0]
+        return self.count(Pred.intersects(G.Spheres(
+            queries, jnp.full((nq,), radius, queries.dtype))))
+
+    def query_ray_nearest(self, origins, directions, k: int = 1):
+        """DEPRECATED: use ``query(RayNearest(Rays(o, d), k))``."""
+        _warn_deprecated(
+            "DistributedTree.query_ray_nearest", "query_ray_nearest is "
+            "deprecated; use query(P.RayNearest(G.Rays(o, d), k))")
+        res = self.query(Pred.RayNearest(G.Rays(origins, directions), k))
+        return res.distances, res.indices
+
+    def query_callback(self, predicates_maker, callback, state0, queries,
+                       combine=None):
+        """DEPRECATED: use ``query(predicates, callback=(cb, state0),
+        policy=policy.override(combine=...))`` with a real predicate
+        batch."""
+        _warn_deprecated(
+            "DistributedTree.query_callback", "query_callback(maker, cb, "
+            "state0, queries) is deprecated; build the predicate batch "
+            "yourself and call query(predicates, callback=(cb, state0))")
+        preds = predicates_maker(queries)
+        return self.query(preds, callback=(callback, state0),
+                          policy=self.policy.override(combine=combine))
+
+    def query_values_to_origin(self, queries, radius, capacity: int):
+        """DEPRECATED alias of :func:`ship_values_baseline`."""
+        _warn_deprecated(
+            "DistributedTree.query_values_to_origin", "query_values_to_"
+            "origin is deprecated; it exists only as the §2.3 benchmark "
+            "anti-pattern — call ship_values_baseline(tree, ...) directly")
+        return ship_values_baseline(self, queries, radius, capacity)
+
+
+def ship_values_baseline(tree: DistributedTree, queries, radius,
+                         capacity: int):
+    """ANTI-PATTERN baseline for the §2.3 benchmark: ship up to `capacity`
+    matched VALUES (coordinates) back to the originating shard instead of
+    reducing data-side. Collective bytes scale with capacity * dim —
+    compare with the counting callback in the HLO. Requires Points values."""
+    if not isinstance(tree.values, G.Points):
+        raise TypeError("ship_values_baseline requires Points values")
+    axis, R, n_local = tree.axis, tree.R, tree.n_local
+
+    def step(trees, vals_local, q_local):
+        q_all = jax.lax.all_gather(q_local, axis, tiled=True)
+        nq = q_all.shape[0]
+        preds = Pred.intersects(G.Spheres(
+            q_all, jnp.full((nq,), radius, q_all.dtype)))
+        cb, s0 = CB.collect_hits(capacity)
+        s0 = _bcast_state(s0, nq)
+        count, idxs, _ = T.traverse(trees, vals_local, preds, cb, s0)
+        coords_local = vals_local.coords
+        vals = coords_local[jnp.maximum(idxs, 0)]          # (Q, cap, dim)
+        vals = jnp.where((idxs >= 0)[..., None], vals, jnp.inf)
+        qloc = q_local.shape[0]
+        vals = jax.lax.all_to_all(
+            vals.reshape(R, qloc, capacity, vals.shape[-1]), axis, 0, 0)
+        count = jax.lax.all_to_all(count.reshape(R, qloc), axis, 0, 0)
+        return jnp.moveaxis(vals, 0, 1), jnp.moveaxis(count, 0, 1)
+
+    spec = PS(axis)
+    return jax.jit(shard_map(
+        step, mesh=tree.mesh, in_specs=(spec, spec, spec),
+        out_specs=(spec, spec), check_vma=False))(
+            tree.trees, tree.values, queries)

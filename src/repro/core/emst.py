@@ -28,8 +28,7 @@ import jax.numpy as jnp
 
 from . import geometry as G
 from . import predicates as P
-from . import traversal as T
-from .lbvh import build as lbvh_build
+from .bvh import BVH
 
 __all__ = ["emst"]
 
@@ -77,7 +76,7 @@ def emst(coords):
     coords = jnp.asarray(coords)
     n = coords.shape[0]
     pts = G.Points(coords)
-    tree = lbvh_build(G.Boxes(coords, coords))
+    index = BVH(pts)
     idx = jnp.arange(n, dtype=jnp.int32)
 
     def cond(state):
@@ -87,11 +86,12 @@ def emst(coords):
     def body(state):
         comp, eu, ev, ew, count = state
 
-        # 1. nearest neighbor outside own component (one traversal)
-        preds = P.nearest(pts, k=1)
-        d, j = T.traverse_knn(tree, pts, preds, 1,
-                              exclude_labels=comp, leaf_labels=comp)
-        d, j = d[:, 0], j[:, 0]
+        # 1. nearest neighbor outside own component (one traversal):
+        # Nearest.exclude is the unified spelling of the paper's
+        # component-exclusion query (labels checked at the leaves)
+        preds = P.nearest(pts, k=1, exclude=(comp, comp))
+        res = index.query(preds)
+        d, j = res.distances[:, 0], res.indices[:, 0]
         has = j >= 0
         js = jnp.maximum(j, 0)
         lo_pt = jnp.minimum(idx, js)

@@ -217,13 +217,7 @@ class QueryEngine:
 
     # -- brute-force fill (index-ordered; sets match traversal order) -----
     def bruteforce_fill(self, brute, predicates, capacity: int):
-        mask = brute._match_matrix(predicates)           # (Q, N) bool
-        counts = mask.sum(-1).astype(jnp.int32)
-        n = mask.shape[1]
-        key = jnp.where(mask, jnp.arange(n, dtype=jnp.int32)[None, :], n)
-        first = jax.lax.sort(key, dimension=1)[:, :capacity]
-        buf = jnp.where(first < n, first, -1).astype(jnp.int32)
-        return counts, buf
+        return brute._fill_impl(predicates, capacity, brute.policy)
 
     # -- executable cache (DESIGN.md §5) -----------------------------------
     #
@@ -297,7 +291,7 @@ class QueryEngine:
                     self.stats.jit_traces += 1
                     from .brute_force import BruteForce
                     return self.bruteforce_fill(
-                        BruteForce(None, values, getter), preds, capacity)
+                        BruteForce(values, getter), preds, capacity)
                 return jax.jit(body)
 
             fn, hit = self._cached(key, make)
@@ -341,7 +335,8 @@ class QueryEngine:
                 def body(values, preds):
                     self.stats.jit_traces += 1
                     from .brute_force import BruteForce
-                    return BruteForce(None, values, getter).knn(None, preds)
+                    bf = BruteForce(values, getter)
+                    return bf._knn_impl(preds, bf.policy)
                 return jax.jit(body)
 
             fn, hit = self._cached(key, make)

@@ -22,8 +22,7 @@ import jax.numpy as jnp
 
 from . import geometry as G
 from . import predicates as P
-from . import traversal as T
-from .lbvh import build as lbvh_build
+from .bvh import BVH
 
 __all__ = ["mls_interpolate", "wendland_c2", "polynomial_basis_size"]
 
@@ -58,10 +57,9 @@ def _basis(x, degree: int):
 
 @partial(jax.jit, static_argnames=("k", "degree"))
 def _mls(src_coords, src_values, tgt_coords, k: int, degree: int, reg: float):
-    tree = lbvh_build(G.Boxes(src_coords, src_coords))
-    pts = G.Points(src_coords)
-    preds = P.nearest(G.Points(tgt_coords), k=k)
-    dists, idxs = T.traverse_knn(tree, pts, preds, k)   # (T, k)
+    index = BVH(G.Points(src_coords))
+    res = index.query(P.nearest(G.Points(tgt_coords), k=k))
+    dists, idxs = res.distances, res.indices            # (T, k)
 
     m = polynomial_basis_size(src_coords.shape[1], degree)
 

@@ -57,10 +57,20 @@ class Intersects:
 
 @_register(static=("k",))
 class Nearest:
-    """k-nearest predicate. `geom` is the query geometry array, `k` static."""
+    """k-nearest predicate. `geom` is the query geometry array, `k` static.
+
+    ``exclude`` is an optional ``(query_labels, leaf_labels)`` pair of
+    int32 arrays ((Q,) and (N,), in ORIGINAL index space): a stored value
+    is a candidate for query q only when
+    ``leaf_labels[value_index] != query_labels[q]`` — Borůvka's "nearest
+    outside my component" query (§2.4 EMST). Backends that cannot honor
+    it (the fused kernel, DistributedTree) must not be routed such
+    predicates; the loop/bruteforce paths implement it exactly.
+    """
     geom: object
     k: int = 1
     data: object = None
+    exclude: object = None
 
     def __len__(self):
         return len(self.geom)
@@ -106,8 +116,8 @@ def intersects(geom, data=None) -> Intersects:
     return Intersects(geom, data)
 
 
-def nearest(geom, k: int = 1, data=None) -> Nearest:
-    return Nearest(geom, k, data)
+def nearest(geom, k: int = 1, data=None, exclude=None) -> Nearest:
+    return Nearest(geom, k, data, exclude)
 
 
 def attach_data(pred, data):

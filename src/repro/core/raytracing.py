@@ -1,82 +1,49 @@
-"""Ray tracing (§2.5).
+"""Ray tracing (§2.5) — thin conveniences over the unified
+:meth:`~repro.core.index.Index.query`.
 
-Three predicate kinds over a BVH of boxes / triangles / spheres:
+Three predicate kinds over any Index of boxes / triangles / spheres:
 
-  * ``cast_nearest(bvh, rays, k)``   — first k hits along each ray (k=1:
-    closest object). Implemented as pruned kNN traversal where "distance"
-    is the ray parameter t (predicates.node_min_distance for rays), so
-    subtrees entered beyond the current k-th best t are skipped. Results
-    arrive sorted by t.
-  * ``cast_intersect(bvh, rays)``    — all hits, CSR (transparent objects).
-  * ``cast_ordered(bvh, rays)``      — all hits, CSR, sorted by t within
-    each ray (energy deposition through a medium).
+  * ``cast_nearest(index, rays, k)``   — first k hits along each ray (k=1:
+    closest object); ``query(RayNearest(rays, k))``. Results arrive sorted
+    by the ray parameter t (pruned kNN traversal where "distance" is t).
+  * ``cast_intersect(index, rays)``    — all hits, CSR (transparent
+    objects); ``query(RayIntersect(rays))``.
+  * ``cast_ordered(index, rays)``      — all hits, CSR, sorted by t within
+    each ray (energy deposition through a medium);
+    ``query(RayOrderedIntersect(rays))``. Single-node indexes only.
 
-Distributed variants (nearest/intersect per §2.5) live in
-:mod:`repro.core.distributed`.
+Each returns the same tuples as before the Index unification; call
+``query`` directly for the full :class:`~repro.core.index.QueryResult`.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
 from . import geometry as G
 from . import predicates as P
-from . import traversal as T
 
 __all__ = ["cast_nearest", "cast_intersect", "cast_ordered"]
 
 
-def cast_nearest(bvh, rays: G.Rays, k: int = 1):
+def cast_nearest(index, rays: G.Rays, k: int = 1):
     """First-k hits. Returns (t, idx): (N_rays, k), padded (inf, -1),
     ordered by increasing t (the physical encounter order)."""
-    preds = P.RayNearest(rays, k)
-    return T.traverse_knn(bvh.tree, bvh.values, preds, k)
+    res = index.query(P.RayNearest(rays, k))
+    return res.distances, res.indices
 
 
-def cast_intersect(bvh, rays: G.Rays, capacity: int | None = None):
+def cast_intersect(index, rays: G.Rays, capacity: int | None = None):
     """All hits, CSR: (values_out, idx, offsets). Traversal order within a
     ray is unspecified (like ArborX's `intersect`)."""
-    preds = P.RayIntersect(rays)
-    return bvh.query(None, preds, capacity)
+    res = index.query(P.RayIntersect(rays), capacity=capacity)
+    return res.values, res.indices, res.offsets
 
 
-def cast_ordered(bvh, rays: G.Rays, capacity: int | None = None):
+def cast_ordered(index, rays: G.Rays, capacity: int | None = None):
     """All hits ordered by t within each ray (§2.5 ordered_intersect).
 
     Returns (idx, t, offsets) in CSR layout. Implemented as collect +
     per-ray segment sort by t — the TPU-friendly spelling of ordered
     traversal (a data-dependent in-order walk is serial; collect+sort is
-    two vector passes).
+    two vector passes). See Index._query_ordered for the shared body.
     """
-    nq = len(rays)
-    preds = P.RayOrderedIntersect(rays)
-    if capacity is None:
-        if nq:
-            counts = bvh.count(None, preds)
-            capacity = max(int(counts.max()), 1)
-        else:
-            capacity = 1    # jnp.max of an empty counts array would throw
-    import repro.core.callbacks as CB
-    cb, s0 = CB.collect_hits(capacity)
-    s0 = jax.tree_util.tree_map(
-        lambda a: jnp.broadcast_to(a, (nq,) + jnp.shape(a)), s0)
-    count, idxs, ts = bvh.query_callback(None, preds, cb, s0)
-    count = jnp.minimum(count, capacity)
-
-    # in-buffer segment sort: invalid slots already hold t=inf so a plain
-    # per-row sort pushes them to the end
-    order = jnp.argsort(ts, axis=1)
-    ts_s = jnp.take_along_axis(ts, order, axis=1)
-    idxs_s = jnp.take_along_axis(idxs, order, axis=1)
-
-    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
-                               jnp.cumsum(count)]).astype(jnp.int32)
-    total = int(offsets[-1])
-    ar = jnp.arange(capacity)[None, :]
-    valid = ar < count[:, None]
-    pos = offsets[:-1][:, None] + ar
-    flat_idx = jnp.zeros((total + 1,), jnp.int32).at[
-        jnp.where(valid, pos, total)].set(idxs_s)[:total]
-    flat_t = jnp.zeros((total + 1,), ts.dtype).at[
-        jnp.where(valid, pos, total)].set(ts_s)[:total]
-    return flat_idx, flat_t, offsets
+    res = index.query(P.RayOrderedIntersect(rays), capacity=capacity)
+    return res.indices, res.distances, res.offsets

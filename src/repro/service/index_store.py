@@ -26,6 +26,7 @@ from ..core import engine as E
 from ..core import lbvh
 from ..core.access import default_indexable_getter
 from ..core.bvh import BVH
+from ..core.index import ExecutionPolicy
 
 __all__ = ["IndexStore", "IndexVersion"]
 
@@ -94,8 +95,7 @@ class IndexStore:
         if sah > self.rebuild_threshold * cur.sah_built:
             return self._publish(name, values, getter, action="rebuild")
 
-        bvh = BVH.from_tree(cur.bvh.space, values, new_tree, getter,
-                            engine=self.engine)
+        bvh = BVH.from_tree(values, new_tree, getter, policy=cur.bvh.policy)
         return self._swap(IndexVersion(
             name=name, version=0, bvh=bvh, action="refit", sah=sah,
             sah_built=cur.sah_built,
@@ -103,7 +103,7 @@ class IndexStore:
 
     # -- internals ---------------------------------------------------------
     def _publish(self, name, values, getter, *, action) -> IndexVersion:
-        bvh = BVH(None, values, getter, engine=self.engine)
+        bvh = BVH(values, getter, policy=ExecutionPolicy(engine=self.engine))
         sah = float(lbvh.sah_cost(bvh.tree)) if bvh.tree is not None else 0.0
         return self._swap(IndexVersion(
             name=name, version=0, bvh=bvh, action=action, sah=sah,

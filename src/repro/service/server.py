@@ -133,7 +133,8 @@ class QueryServer:
         if group.kind == KIND_WITHIN:
             preds = P.intersects(G.Spheres(a, jnp.asarray(group.b)))
             if tiny:
-                counts, buf = bvh._fill(preds, self.config.capacity)
+                counts, buf = bvh._fill_impl(preds, self.config.capacity,
+                                             bvh.policy)
             else:
                 (counts, buf), info = self.engine.exec_spatial(
                     bvh, preds, self.config.capacity)
@@ -143,14 +144,16 @@ class QueryServer:
         elif group.kind == KIND_KNN:
             preds = P.nearest(G.Points(a), k=group.k)
             if tiny:
-                d, i = bvh.knn(None, preds)
+                res = bvh.query(preds)
+                d, i = res.distances, res.indices
             else:
                 (d, i), info = self.engine.exec_knn(bvh, preds)
             res_rows = (np.asarray(d), np.asarray(i))
         else:  # KIND_RAY
             rays = G.Rays(a, jnp.asarray(group.b))
             if tiny:
-                d, i = bvh.knn(None, P.RayNearest(rays, group.k))
+                res = bvh.query(P.RayNearest(rays, group.k))
+                d, i = res.distances, res.indices
             else:
                 (d, i), info = self.engine.exec_ray_nearest(
                     bvh, rays, group.k)

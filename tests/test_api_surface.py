@@ -1,0 +1,122 @@
+"""API-surface CI (ISSUE 5 satellite): the three indexes expose literally
+identical ``query``/``count`` signatures, ``repro.core.__all__`` stays in
+sync with the actual exports, and the legacy API-v1 spellings are
+deprecation shims (the tier-1 runner executes under
+``-W error::DeprecationWarning`` so stray in-repo legacy call sites fail
+loudly)."""
+import inspect
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import geometry as G, predicates as P
+from repro.core.brute_force import BruteForce
+from repro.core.bvh import BVH
+from repro.core.distributed import DistributedTree
+from repro.core.index import Index
+from repro.core import index as IX
+
+
+def test_query_signature_identical_across_indexes():
+    sig = inspect.signature(Index.query)
+    for cls in (BVH, BruteForce, DistributedTree):
+        assert inspect.signature(cls.query) == sig, cls
+    # the unified signature is the ISSUE-5 contract
+    assert [p for p in sig.parameters] == \
+        ["self", "predicates", "_legacy", "callback", "out", "capacity",
+         "policy"]
+
+
+def test_count_signature_identical_across_indexes():
+    sig = inspect.signature(Index.count)
+    for cls in (BVH, BruteForce, DistributedTree):
+        assert inspect.signature(cls.count) == sig, cls
+
+
+def test_constructor_contract():
+    """Construction is (values, indexable_getter=..., policy=...) on every
+    backend (DistributedTree prepends its mesh/axis pair)."""
+    for cls, skip in ((BVH, 0), (BruteForce, 0), (DistributedTree, 2)):
+        params = list(inspect.signature(cls.__init__).parameters)[1 + skip:]
+        assert params[0] == "values", cls
+        assert params[1] == "indexable_getter", cls
+        assert "policy" in params, cls
+
+
+def test_core_all_matches_exports():
+    names = set(core.__all__)
+    assert len(core.__all__) == len(names), "duplicates in __all__"
+    for name in names:
+        assert hasattr(core, name), f"__all__ lists missing export {name}"
+    # every public class/function living under repro.core must be listed
+    for name in dir(core):
+        if name.startswith("_"):
+            continue
+        obj = getattr(core, name)
+        if inspect.ismodule(obj):
+            continue
+        if getattr(obj, "__module__", "").startswith("repro.core"):
+            assert name in names, f"public export {name} missing in __all__"
+    for required in ("Index", "ExecutionPolicy", "QueryResult", "BVH",
+                     "BruteForce", "DistributedTree"):
+        assert required in names
+
+
+def _mk():
+    r = np.random.default_rng(0)
+    vals = G.Points(jnp.asarray(r.uniform(0, 1, (50, 3)).astype(np.float32)))
+    q = jnp.asarray(r.uniform(0, 1, (4, 3)).astype(np.float32))
+    return vals, P.intersects(G.Spheres(q, jnp.full((4,), 0.3))), q
+
+
+def test_legacy_spellings_warn_deprecation():
+    vals, preds, q = _mk()
+    knn = P.nearest(G.Points(q), k=2)
+
+    IX._SEEN_DEPRECATIONS.clear()
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        bvh = BVH(None, vals)                     # space-first constructor
+    IX._SEEN_DEPRECATIONS.clear()
+    with pytest.warns(DeprecationWarning, match="QueryResult"):
+        v, i, o = bvh.query(None, preds)          # legacy triple unpack
+    IX._SEEN_DEPRECATIONS.clear()
+    with pytest.warns(DeprecationWarning):
+        c = bvh.count(None, preds)
+    assert np.array_equal(np.asarray(np.diff(np.asarray(o))), np.asarray(c))
+    IX._SEEN_DEPRECATIONS.clear()
+    with pytest.warns(DeprecationWarning):
+        d, idx = bvh.knn(None, knn)
+    assert d.shape == (4, 2)
+    IX._SEEN_DEPRECATIONS.clear()
+    with pytest.warns(DeprecationWarning):
+        out, off = bvh.query_out(None, preds, lambda p, v, i, t: t)
+    IX._SEEN_DEPRECATIONS.clear()
+
+
+def test_legacy_warnings_fire_once_per_spelling():
+    import warnings
+    vals, preds, _ = _mk()
+    bvh = BVH(vals)
+    IX._SEEN_DEPRECATIONS.clear()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        bvh.count(None, preds)
+        bvh.count(None, preds)
+    assert len([w for w in rec
+                if issubclass(w.category, DeprecationWarning)]) == 1
+    IX._SEEN_DEPRECATIONS.clear()
+
+
+def test_new_api_is_warning_free():
+    import warnings
+    vals, preds, q = _mk()
+    IX._SEEN_DEPRECATIONS.clear()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        bvh = BVH(vals)
+        bvh.query(preds)
+        bvh.count(preds)
+        bvh.query(P.nearest(G.Points(q), k=2))
+        BruteForce(vals).query(preds)

@@ -1,6 +1,6 @@
 """BVH queries vs the BruteForce oracle (the paper's own exactness bar:
-both indexes must return identical result sets)."""
-import jax
+both indexes must return identical result sets), through the unified
+``Index.query()``."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -9,6 +9,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core import geometry as G, predicates as P, callbacks as CB
 from repro.core.brute_force import BruteForce
 from repro.core.bvh import BVH
+from repro.core.index import ExecutionPolicy
 
 rng = np.random.default_rng(7)
 
@@ -23,8 +24,8 @@ def test_sphere_counts_match_bruteforce(dim):
     vals = _points(300, dim, seed=dim)
     q = _points(40, dim, seed=100 + dim)
     preds = P.intersects(G.Spheres(q.coords, jnp.full((40,), 0.3)))
-    a = BVH(None, vals).count(None, preds)
-    b = BruteForce(None, vals).count(None, preds)
+    a = BVH(vals).count(preds)
+    b = BruteForce(vals).count(preds)
     assert np.array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -32,14 +33,14 @@ def test_box_query_sets_match():
     vals = _points(400)
     lo = jnp.asarray(rng.uniform(0, 0.8, (30, 3)).astype(np.float32))
     preds = P.intersects(G.Boxes(lo, lo + 0.2))
-    bvh, bf = BVH(None, vals), BruteForce(None, vals)
-    _, ia, oa = bvh.query(None, preds)
-    _, ib, ob = bf.query(None, preds)
-    assert np.array_equal(np.asarray(oa), np.asarray(ob))
+    ra = BVH(vals).query(preds)
+    rb = BruteForce(vals).query(preds)
+    ia, oa = np.asarray(ra.indices), np.asarray(ra.offsets)
+    ib, ob = np.asarray(rb.indices), np.asarray(rb.offsets)
+    assert np.array_equal(oa, ob)
     for q in range(30):
-        sa = set(np.asarray(ia[oa[q]:oa[q + 1]]).tolist())
-        sb = set(np.asarray(ib[ob[q]:ob[q + 1]]).tolist())
-        assert sa == sb
+        assert set(ia[oa[q]:oa[q + 1]].tolist()) \
+            == set(ib[ob[q]:ob[q + 1]].tolist())
 
 
 @pytest.mark.parametrize("k", [1, 4, 17])
@@ -47,9 +48,12 @@ def test_knn_matches_bruteforce(k):
     vals = _points(500)
     q = _points(64, seed=5)
     preds = P.nearest(q, k=k)
-    da, ia = BVH(None, vals).knn(None, preds)
-    db, ib = BruteForce(None, vals).knn(None, preds)
-    assert np.allclose(np.asarray(da), np.asarray(db), atol=1e-5)
+    ra = BVH(vals).query(preds)
+    rb = BruteForce(vals).query(preds)
+    assert np.allclose(np.asarray(ra.distances), np.asarray(rb.distances),
+                       atol=1e-5)
+    # kNN results also gather the matched values ((Q, k, ...))
+    assert ra.values.coords.shape == (64, k, 3)
 
 
 def test_knn_against_triangles_fine_distance():
@@ -61,8 +65,8 @@ def test_knn_against_triangles_fine_distance():
                        jnp.asarray(a + r.uniform(-.1, .1, (200, 3)).astype(np.float32)))
     q = _points(32, seed=12)
     preds = P.nearest(q, k=3)
-    da, ia = BVH(None, tris).knn(None, preds)
-    db, ib = BruteForce(None, tris).knn(None, preds)
+    da = BVH(tris).query(preds).distances
+    db = BruteForce(tris).query(preds).distances
     assert np.allclose(np.asarray(da), np.asarray(db), atol=1e-5)
 
 
@@ -71,10 +75,10 @@ def test_degenerate_sizes():
         vals = _points(max(n, 1), seed=20)
         if n == 0:
             vals = G.Points(jnp.zeros((0, 3), jnp.float32))
-        bvh = BVH(None, vals)
+        bvh = BVH(vals)
         assert bvh.size() == n and bvh.empty() == (n == 0)
         q = _points(4, seed=21)
-        c = bvh.count(None, P.intersects(G.Spheres(q.coords, jnp.full((4,), 10.0))))
+        c = bvh.count(P.intersects(G.Spheres(q.coords, jnp.full((4,), 10.0))))
         assert np.all(np.asarray(c) == n)
 
 
@@ -83,16 +87,16 @@ def test_query_out_transforms_values():
     vals = _points(100)
     q = _points(10, seed=30)
     preds = P.intersects(G.Spheres(q.coords, jnp.full((10,), 0.4)))
-    bvh = BVH(None, vals)
+    bvh = BVH(vals)
 
     def out_fn(pred, value, index, t):
         return jnp.sum(value.coords)            # scalar per match
 
-    out, offsets = bvh.query_out(None, preds, out_fn)
-    _, idx, off2 = bvh.query(None, preds)
-    assert np.array_equal(np.asarray(offsets), np.asarray(off2))
-    expect = np.asarray(vals.coords).sum(1)[np.asarray(idx)]
-    assert np.allclose(np.asarray(out), expect, atol=1e-5)
+    res = bvh.query(preds, out=out_fn)
+    ref = bvh.query(preds)
+    assert np.array_equal(np.asarray(res.offsets), np.asarray(ref.offsets))
+    expect = np.asarray(vals.coords).sum(1)[np.asarray(ref.indices)]
+    assert np.allclose(np.asarray(res.values), expect, atol=1e-5)
 
 
 def test_attach_data_reaches_callback():
@@ -106,10 +110,9 @@ def test_attach_data_reaches_callback():
     def cb(state, pred, value, index, t):
         return jnp.maximum(state, pred.data), jnp.bool_(False)
 
-    s0 = jnp.full((8,), -1.0)
-    got = BVH(None, vals).query_callback(None, preds, cb, s0)
-    counts = BVH(None, vals).count(
-        None, P.intersects(G.Spheres(q.coords, jnp.full((8,), 0.5))))
+    got = BVH(vals).query(preds, callback=(cb, jnp.float32(-1.0)))
+    counts = BVH(vals).count(
+        P.intersects(G.Spheres(q.coords, jnp.full((8,), 0.5))))
     expect = np.where(np.asarray(counts) > 0, np.asarray(payload), -1.0)
     assert np.allclose(np.asarray(got), expect)
 
@@ -125,27 +128,27 @@ def test_property_bvh_equals_bruteforce(n, seed, radius, dim):
     q = G.Points(jnp.asarray(r.uniform(0, 1, (8, dim)).astype(np.float32)))
     preds = P.intersects(G.Spheres(q.coords,
                                    jnp.full((8,), np.float32(radius))))
-    a = BVH(None, vals).count(None, preds)
-    b = BruteForce(None, vals).count(None, preds)
+    a = BVH(vals).count(preds)
+    b = BruteForce(vals).count(preds)
     assert np.array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_csr_zero_total_matches():
     """All-miss predicates: empty CSR arrays, all-zero offsets — on both
-    indexes and on every engine route (`BVH._csr_pack` with total == 0)."""
+    indexes and on every engine route (`_csr_pack` with total == 0)."""
     from repro.core.engine import EngineConfig, QueryEngine
     vals = _points(50, seed=50)
     far = jnp.asarray(rng.uniform(10, 11, (6, 3)).astype(np.float32))
     preds = P.intersects(G.Spheres(far, jnp.full((6,), 0.01, jnp.float32)))
     for force in ("loop", "bruteforce", "pallas"):
         eng = QueryEngine(EngineConfig(force=force))
-        v, idx, off = BVH(None, vals, engine=eng).query(None, preds)
-        assert idx.shape == (0,)
-        assert v.coords.shape == (0, 3)
-        assert np.array_equal(np.asarray(off), np.zeros(7, np.int32))
-    v, idx, off = BruteForce(None, vals).query(None, preds)
-    assert idx.shape == (0,)
-    assert np.array_equal(np.asarray(off), np.zeros(7, np.int32))
+        res = BVH(vals, engine=eng).query(preds)
+        assert res.indices.shape == (0,)
+        assert res.values.coords.shape == (0, 3)
+        assert np.array_equal(np.asarray(res.offsets), np.zeros(7, np.int32))
+    res = BruteForce(vals).query(preds)
+    assert res.indices.shape == (0,)
+    assert np.array_equal(np.asarray(res.offsets), np.zeros(7, np.int32))
 
 
 def test_csr_capacity_clamping():
@@ -155,18 +158,18 @@ def test_csr_capacity_clamping():
     from repro.core.engine import EngineConfig, QueryEngine
     vals = _points(60, seed=51)
     preds = P.intersects(G.Spheres(vals.coords[:5], jnp.full((5,), 10.0)))
-    full = np.asarray(BruteForce(None, vals).count(None, preds))
+    full = np.asarray(BruteForce(vals).count(preds))
     assert (full == 60).all()
     cap = 7
+    pol = ExecutionPolicy(max_doublings=0)
     for force in ("loop", "bruteforce", "pallas"):
         eng = QueryEngine(EngineConfig(force=force))
-        res = BVH(None, vals, engine=eng).query(None, preds, capacity=cap,
-                                                max_doublings=0)
-        _, idx, off = res
+        res = BVH(vals, engine=eng).query(preds, capacity=cap,
+                                          policy=pol.override(engine=eng))
         assert res.overflow
-        off = np.asarray(off)
+        off = np.asarray(res.offsets)
         assert np.array_equal(off, np.arange(6) * cap)
-        idx = np.asarray(idx)
+        idx = np.asarray(res.indices)
         assert idx.shape == (5 * cap,)
         for qi in range(5):
             s = set(idx[off[qi]:off[qi + 1]].tolist())
@@ -176,15 +179,15 @@ def test_csr_capacity_clamping():
 def test_csr_capacity_overflow_doubling_retry():
     """A low capacity guess no longer truncates silently: the fill is
     retried at doubled capacity until the true max count fits, and the
-    result unpacks like a plain 3-tuple with overflow=False."""
+    result unpacks like a plain NamedTuple with overflow=False."""
     from repro.core.engine import EngineConfig, QueryEngine
     vals = _points(60, seed=51)
     preds = P.intersects(G.Spheres(vals.coords[:5], jnp.full((5,), 10.0)))
     for force in ("loop", "bruteforce", "pallas"):
         eng = QueryEngine(EngineConfig(force=force))
-        res = BVH(None, vals, engine=eng).query(None, preds, capacity=7)
-        v, idx, off = res
-        assert not res.overflow
+        res = BVH(vals, engine=eng).query(preds, capacity=7)
+        v, idx, off, dists, overflow = res          # NamedTuple unpacking
+        assert not overflow and dists is None
         off = np.asarray(off)
         assert np.array_equal(off, np.arange(6) * 60)   # full result sets
         for qi in range(5):
@@ -198,10 +201,10 @@ def test_csr_capacity_retry_cap_flags_overflow():
     is flagged."""
     vals = _points(60, seed=51)
     preds = P.intersects(G.Spheres(vals.coords[:5], jnp.full((5,), 10.0)))
-    res = BVH(None, vals).query(None, preds, capacity=7, max_doublings=1)
-    _, idx, off = res
+    res = BVH(vals).query(preds, capacity=7,
+                          policy=ExecutionPolicy(capacity=7, max_doublings=1))
     assert res.overflow
-    assert np.array_equal(np.asarray(off), np.arange(6) * 14)
+    assert np.array_equal(np.asarray(res.offsets), np.arange(6) * 14)
 
 
 def test_csr_empty_predicate_batch():
@@ -210,10 +213,10 @@ def test_csr_empty_predicate_batch():
     vals = _points(50, seed=53)
     preds = P.intersects(G.Spheres(jnp.zeros((0, 3), jnp.float32),
                                    jnp.zeros((0,), jnp.float32)))
-    v, idx, off = BVH(None, vals).query(None, preds)
-    assert idx.shape == (0,)
-    assert np.array_equal(np.asarray(off), np.zeros(1, np.int32))
-    assert BVH(None, vals).count(None, preds).shape == (0,)
+    res = BVH(vals).query(preds)
+    assert res.indices.shape == (0,)
+    assert np.array_equal(np.asarray(res.offsets), np.zeros(1, np.int32))
+    assert BVH(vals).count(preds).shape == (0,)
 
 
 def test_csr_degenerate_trees():
@@ -223,15 +226,15 @@ def test_csr_degenerate_trees():
     preds = P.intersects(G.Spheres(q.coords, jnp.full((3,), 10.0)))
     for n in (0, 1):
         vals = G.Points(jnp.zeros((n, 3), jnp.float32))
-        bvh = BVH(None, vals)
+        bvh = BVH(vals)
         assert bvh.tree is None
-        c = np.asarray(bvh.count(None, preds))
+        c = np.asarray(bvh.count(preds))
         assert (c == n).all()
-        _, idx, off = bvh.query(None, preds)
-        assert np.array_equal(np.asarray(off), np.arange(4) * n)
-        assert idx.shape == (3 * n,)
-        d, i = bvh.knn(None, P.nearest(q, k=2))
-        d, i = np.asarray(d), np.asarray(i)
+        res = bvh.query(preds)
+        assert np.array_equal(np.asarray(res.offsets), np.arange(4) * n)
+        assert res.indices.shape == (3 * n,)
+        kres = bvh.query(P.nearest(q, k=2))
+        d, i = np.asarray(kres.distances), np.asarray(kres.indices)
         assert (i[:, n:] == -1).all() and np.isinf(d[:, n:]).all()
         if n == 1:
             assert (i[:, 0] == 0).all() and np.isfinite(d[:, 0]).all()
@@ -242,10 +245,8 @@ def test_early_exit_prunes_traversal():
     vals = _points(1000)
     q = _points(16, seed=40)
     preds = P.intersects(G.Spheres(q.coords, jnp.full((16,), 0.5)))
-    bvh = BVH(None, vals)
-    cb, s0 = CB.count_with_limit(1)
-    s0 = jnp.broadcast_to(s0, (16,))
-    got = bvh.query_callback(None, preds, cb, s0)
-    full = bvh.count(None, preds)
+    bvh = BVH(vals)
+    got = bvh.query(preds, callback=CB.count_with_limit(1))
+    full = bvh.count(preds)
     assert np.all(np.asarray(got) <= 1)
     assert np.array_equal(np.asarray(got) > 0, np.asarray(full) > 0)

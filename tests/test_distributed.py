@@ -1,5 +1,6 @@
 """DistributedTree (§2.3) on 8 fake host devices (subprocess) vs the
-single-node oracle; callback locality; interpolation; system pipeline."""
+single-node oracle, through the unified ``Index.query()``; callback
+locality; interpolation; system pipeline."""
 import numpy as np
 import pytest
 
@@ -8,6 +9,7 @@ def test_distributed_knn_and_count(subproc):
     code = """
 import jax, jax.numpy as jnp, numpy as np
 from repro.compat import AxisType, make_mesh
+from repro.core import geometry as G, predicates as P
 from repro.core.distributed import DistributedTree
 
 rng = np.random.default_rng(3)
@@ -18,14 +20,23 @@ qp = rng.uniform(0, 1, (Q, 3)).astype(np.float32)
 dt = DistributedTree(mesh, "data", jnp.asarray(pts))
 
 D = np.linalg.norm(qp[:, None] - pts[None], axis=-1)
-d, gi = dt.query_knn(jnp.asarray(qp), 5)
+res = dt.query(P.nearest(G.Points(jnp.asarray(qp)), k=5))
+d, gi = res.distances, res.indices
+assert res.values is None       # values stay on the owning shard (DESIGN §6)
 assert np.allclose(np.asarray(d), np.sort(D, 1)[:, :5], atol=1e-5)
 # returned global indices actually achieve those distances
 dd = np.take_along_axis(D, np.asarray(gi), axis=1)
 assert np.allclose(dd, np.asarray(d), atol=1e-5)
 
-c = dt.query_radius_count(jnp.asarray(qp), 0.2)
+preds = P.intersects(G.Spheres(jnp.asarray(qp), jnp.full((Q,), 0.2, jnp.float32)))
+c = dt.count(preds)
 assert np.array_equal(np.asarray(c), (D <= 0.2).sum(1))
+
+# CSR storage query: match sets identical to the oracle, global indices
+csr = dt.query(preds)
+off, idx = np.asarray(csr.offsets), np.asarray(csr.indices)
+for i in range(Q):
+    assert set(idx[off[i]:off[i+1]].tolist()) == set(np.where(D[i] <= 0.2)[0].tolist())
 print("DIST OK")
 """
     assert "DIST OK" in subproc(code)
@@ -35,6 +46,7 @@ def test_distributed_ray_nearest(subproc):
     code = """
 import jax, jax.numpy as jnp, numpy as np
 from repro.compat import AxisType, make_mesh
+from repro.core import geometry as G, predicates as P
 from repro.core.distributed import DistributedTree
 
 rng = np.random.default_rng(4)
@@ -48,8 +60,8 @@ targets = rng.integers(0, N, R)
 o = pts[targets].copy()
 o[:, 0] -= 1.0
 d = np.tile([1.0, 0.0, 0.0], (R, 1)).astype(np.float32)
-t, gi = dt.query_ray_nearest(jnp.asarray(o), jnp.asarray(d), k=1)
-t = np.asarray(t)[:, 0]
+res = dt.query(P.RayNearest(G.Rays(jnp.asarray(o), jnp.asarray(d)), 1))
+t = np.asarray(res.distances)[:, 0]
 assert np.isfinite(t).all()                      # every ray hits
 assert np.all(t <= 1.0 + 1e-4)                   # at/before the target
 print("RAY OK")
@@ -58,7 +70,8 @@ print("RAY OK")
 
 
 def test_distributed_callback_monoid(subproc):
-    """Callbacks run data-side; custom (non-psum) combine across shards."""
+    """Callbacks run data-side; custom (non-psum) combine across shards
+    rides ExecutionPolicy.combine."""
     code = """
 import jax, jax.numpy as jnp, numpy as np
 from repro.compat import AxisType, make_mesh
@@ -72,14 +85,13 @@ pts = rng.uniform(0, 1, (N, 3)).astype(np.float32)
 qp = rng.uniform(0, 1, (Q, 3)).astype(np.float32)
 dt = DistributedTree(mesh, "data", jnp.asarray(pts))
 
-def maker(q_all):
-    return P.intersects(G.Spheres(q_all, jnp.full((q_all.shape[0],), 0.25)))
+preds = P.intersects(G.Spheres(jnp.asarray(qp), jnp.full((Q,), 0.25, jnp.float32)))
 
 def cb(state, pred, value, index, t):  # min x-coordinate of matches
     return jnp.minimum(state, value.coords[0]), jnp.bool_(False)
 
-got = dt.query_callback(maker, cb, jnp.float32(jnp.inf), jnp.asarray(qp),
-                        combine=lambda a, b: jnp.minimum(a, b))
+got = dt.query(preds, callback=(cb, jnp.float32(jnp.inf)),
+               policy=dt.policy.override(combine=lambda a, b: jnp.minimum(a, b)))
 D = np.linalg.norm(qp[:, None] - pts[None], axis=-1)
 want = np.where((D <= 0.25).any(1),
                 np.where(D <= 0.25, pts[None, :, 0], np.inf).min(1), np.inf)
@@ -87,6 +99,39 @@ assert np.allclose(np.asarray(got), want, atol=1e-6)
 print("CB OK")
 """
     assert "CB OK" in subproc(code)
+
+
+def test_distributed_attach_data_payload(subproc):
+    """ArborX::attach payload travels with the gathered predicates and is
+    delivered to callbacks on the DATA-OWNING shard."""
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.compat import AxisType, make_mesh
+from repro.core.distributed import DistributedTree
+from repro.core import geometry as G, predicates as P
+
+rng = np.random.default_rng(6)
+mesh = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+N, Q = 512, 64
+pts = rng.uniform(0, 1, (N, 3)).astype(np.float32)
+qp = rng.uniform(0, 1, (Q, 3)).astype(np.float32)
+dt = DistributedTree(mesh, "data", jnp.asarray(pts))
+
+payload = jnp.arange(Q, dtype=jnp.float32) * 10
+preds = P.attach_data(P.intersects(G.Spheres(
+    jnp.asarray(qp), jnp.full((Q,), 0.25, jnp.float32))), payload)
+
+def cb(state, pred, value, index, t):
+    return jnp.maximum(state, pred.data), jnp.bool_(False)
+
+got = dt.query(preds, callback=(cb, jnp.float32(-1.0)),
+               policy=dt.policy.override(combine=lambda a, b: jnp.maximum(a, b)))
+D = np.linalg.norm(qp[:, None] - pts[None], axis=-1)
+want = np.where((D <= 0.25).any(1), np.asarray(payload), -1.0)
+assert np.allclose(np.asarray(got), want)
+print("ATTACH OK")
+"""
+    assert "ATTACH OK" in subproc(code)
 
 
 def test_mls_interpolation_exactness():

@@ -40,8 +40,7 @@ def test_pallas_spatial_sphere_counts_bit_exact(n, q, dim):
     tree = build(G.Boxes(pts, pts))
     cnt, _ = bvh_traverse_spatial(*_tree_arrays(tree), qp, qp, r,
                                   capacity=1, fine_sqrt=True, interpret=True)
-    want = BruteForce(None, vals).count(
-        None, P.intersects(G.Spheres(qp, r)))
+    want = BruteForce(vals).count(P.intersects(G.Spheres(qp, r)))
     assert np.array_equal(np.asarray(cnt), np.asarray(want))
 
 
@@ -66,13 +65,14 @@ def test_pallas_spatial_all_query_kinds_vs_oracle(kind):
         preds = P.intersects(G.Spheres(qp, rad))
         q_lo, q_hi = qp, qp
     tree = build(boxes)
-    bf = BruteForce(None, boxes)
-    want = np.asarray(bf.count(None, preds))
+    bf = BruteForce(boxes)
+    want = np.asarray(bf.count(preds))
     cap = max(int(want.max()), 1)
     cnt, buf = bvh_traverse_spatial(*_tree_arrays(tree), q_lo, q_hi, rad,
                                     capacity=cap, interpret=True)
     assert np.array_equal(np.asarray(cnt), want)
-    _, ib, ob = bf.query(None, preds)
+    rb = bf.query(preds)
+    ib, ob = rb.indices, rb.offsets
     ib, ob = np.asarray(ib), np.asarray(ob)
     buf = np.asarray(buf)
     for i in range(q):
@@ -116,7 +116,7 @@ def test_pallas_spatial_min_pos_matches_loop_pair_traversal():
                                   min_pos=inv_perm, interpret=True)
     assert np.array_equal(np.asarray(cnt), np.asarray(want))
     # upper-triangle invariant: sum == (total pairs - Q self matches) / 2
-    full = BruteForce(None, vals).count(None, preds)
+    full = BruteForce(vals).count(preds)
     assert int(np.asarray(cnt).sum()) == (int(np.asarray(full).sum()) - 128) // 2
 
 
@@ -133,8 +133,8 @@ def test_pallas_knn_vs_oracle(n, q, dim, k):
     d1, i1 = bvh_traverse_knn(tree.node_lo, tree.node_hi, tree.rope,
                               tree.left_child, tree.leaf_perm, qp, k=k,
                               interpret=True)
-    d2, i2 = BruteForce(None, G.Points(pts)).knn(
-        None, P.nearest(G.Points(qp), k=k))
+    r2 = BruteForce(G.Points(pts)).query(P.nearest(G.Points(qp), k=k))
+    d2, i2 = r2.distances, r2.indices
     assert np.allclose(np.asarray(d1), np.asarray(d2), atol=1e-4)
     # indices may differ only across exact-distance ties
     same = np.asarray(i1) == np.asarray(i2)
@@ -160,7 +160,7 @@ def test_pallas_knn_k_exceeds_n_pads_with_inf():
 # ---------------------------------------------------------------------------
 
 def _mk(n=600, engine=None):
-    return BVH(None, G.Points(_pts(n, 3, seed=42)), engine=engine)
+    return BVH(G.Points(_pts(n, 3, seed=42)), engine=engine)
 
 
 def test_route_small_work_goes_bruteforce():
@@ -187,7 +187,7 @@ def test_route_ineligible_values_fall_back_to_loop():
     tris = G.Triangles(a, a + 0.05, a + 0.1)
     eng = QueryEngine(EngineConfig(brute_force_max_work=0,
                                    pallas_min_queries=1, pallas_min_leaves=1))
-    bvh = BVH(None, tris, engine=eng)
+    bvh = BVH(tris, engine=eng)
     preds = P.intersects(G.Spheres(_pts(32, 3, seed=3), jnp.full((32,), 0.2)))
     assert eng.route_spatial(bvh, preds) == ROUTE_LOOP
 
@@ -217,18 +217,19 @@ def test_bvh_query_results_path_independent(force):
     vals = G.Points(_pts(300, 3, seed=7))
     preds = P.intersects(G.Spheres(_pts(24, 3, seed=8),
                                    jnp.full((24,), 0.25, jnp.float32)))
-    ref_bvh = BVH(None, vals, engine=QueryEngine(EngineConfig(force=ROUTE_LOOP)))
-    bvh = BVH(None, vals, engine=QueryEngine(EngineConfig(force=force)))
-    assert np.array_equal(np.asarray(bvh.count(None, preds)),
-                          np.asarray(ref_bvh.count(None, preds)))
-    _, ia, oa = bvh.query(None, preds)
-    _, ib, ob = ref_bvh.query(None, preds)
+    ref_bvh = BVH(vals, engine=QueryEngine(EngineConfig(force=ROUTE_LOOP)))
+    bvh = BVH(vals, engine=QueryEngine(EngineConfig(force=force)))
+    assert np.array_equal(np.asarray(bvh.count(preds)),
+                          np.asarray(ref_bvh.count(preds)))
+    ra, rb = bvh.query(preds), ref_bvh.query(preds)
+    ia, oa = ra.indices, ra.offsets
+    ib, ob = rb.indices, rb.offsets
     assert np.array_equal(np.asarray(oa), np.asarray(ob))
     ia, ib, oa = np.asarray(ia), np.asarray(ib), np.asarray(oa)
     for i in range(24):
         assert set(ia[oa[i]:oa[i + 1]].tolist()) == set(ib[oa[i]:oa[i + 1]].tolist())
 
     knn = P.nearest(G.Points(_pts(24, 3, seed=9)), k=5)
-    da, _ = bvh.knn(None, knn)
-    db, _ = ref_bvh.knn(None, knn)
+    da = bvh.query(knn).distances
+    db = ref_bvh.query(knn).distances
     assert np.allclose(np.asarray(da), np.asarray(db), atol=1e-4)

@@ -110,3 +110,19 @@ def test_point_in_tetrahedron():
         jnp.asarray(p), jnp.asarray(a[None]), jnp.asarray(b[None]),
         jnp.asarray(c[None]), jnp.asarray(d[None]))[0])
     assert f(inside) and not f(outside)
+
+
+def test_as_geometry_single_coordinate_vector():
+    """ISSUE 5 satellite: a bare (dim,) coordinate adapts to a one-point
+    geometry instead of raising TypeError."""
+    from repro.core.access import as_geometry
+    g = as_geometry(jnp.asarray([0.1, 0.2, 0.3], jnp.float32))
+    assert isinstance(g, G.Points)
+    assert g.coords.shape == (1, 3)
+    assert np.allclose(np.asarray(g.coords), [[0.1, 0.2, 0.3]])
+    # (N, dim) rank-2 raw arrays keep adapting as before
+    g2 = as_geometry(np.zeros((5, 2), np.float32))
+    assert isinstance(g2, G.Points) and g2.coords.shape == (5, 2)
+    # rank-3 still refuses
+    with pytest.raises(TypeError, match="cannot adapt"):
+        as_geometry(np.zeros((2, 2, 2), np.float32))

@@ -34,7 +34,7 @@ def _oracle_hits(o, d, abc):
 def test_intersect_counts():
     tris, abc = _tri_soup()
     rays, (o, d) = _rays()
-    bvh = BVH(None, tris)
+    bvh = BVH(tris)
     hit, _ = _oracle_hits(o, d, abc)
     _, idx, off = RT.cast_intersect(bvh, rays)
     assert np.array_equal(np.diff(np.asarray(off)), hit.sum(1))
@@ -43,7 +43,7 @@ def test_intersect_counts():
 def test_nearest_first_k_ordered():
     tris, abc = _tri_soup()
     rays, (o, d) = _rays()
-    bvh = BVH(None, tris)
+    bvh = BVH(tris)
     hit, t = _oracle_hits(o, d, abc)
     t = np.where(hit, t, np.inf)
     k = 4
@@ -58,7 +58,7 @@ def test_nearest_first_k_ordered():
 def test_ordered_intersect_is_sorted_and_complete():
     tris, abc = _tri_soup()
     rays, (o, d) = _rays()
-    bvh = BVH(None, tris)
+    bvh = BVH(tris)
     hit, t = _oracle_hits(o, d, abc)
     fi, ft, off = RT.cast_ordered(bvh, rays)
     off = np.asarray(off)
@@ -76,7 +76,7 @@ def test_spheres_ray_nearest():
     rad = r.uniform(0.02, 0.08, (100,)).astype(np.float32)
     spheres = G.Spheres(jnp.asarray(c), jnp.asarray(rad))
     rays, (o, d) = _rays(seed=4)
-    bvh = BVH(None, spheres)
+    bvh = BVH(spheres)
     hit, t = G.ray_sphere(o[:, None], d[:, None], c[None], rad[None])
     t = np.where(np.asarray(hit), np.asarray(t), np.inf)
     t1, i1 = RT.cast_nearest(bvh, rays, k=1)
@@ -89,7 +89,7 @@ def test_boxes_ray_tracing():
     hi = lo + r.uniform(0.02, 0.1, (150, 3)).astype(np.float32)
     boxes = G.Boxes(jnp.asarray(lo), jnp.asarray(hi))
     rays, (o, d) = _rays(seed=6)
-    bvh = BVH(None, boxes)
+    bvh = BVH(boxes)
     hit, t = G.ray_box(o[:, None], d[:, None], lo[None], hi[None])
     counts = np.asarray(hit).sum(1)
     _, idx, off = RT.cast_intersect(bvh, rays)
@@ -105,7 +105,7 @@ def test_cast_ordered_sorted_by_t_matches_oracle_t():
     equals the oracle hit parameter of the stored primitive."""
     tris, abc = _tri_soup(seed=21)
     rays, (o, d) = _rays(seed=22)
-    bvh = BVH(None, tris)
+    bvh = BVH(tris)
     hit, t = _oracle_hits(o, d, abc)
     fi, ft, off = RT.cast_ordered(bvh, rays)
     fi, ft, off = np.asarray(fi), np.asarray(ft), np.asarray(off)
@@ -121,7 +121,7 @@ def test_cast_ordered_zero_rays():
     """Q == 0 must produce the empty CSR, not crash sizing capacity from an
     empty counts reduction."""
     tris, _ = _tri_soup(seed=23)
-    bvh = BVH(None, tris)
+    bvh = BVH(tris)
     empty = G.Rays(jnp.zeros((0, 3), jnp.float32),
                    jnp.ones((0, 3), jnp.float32))
     fi, ft, off = RT.cast_ordered(bvh, empty)
@@ -132,7 +132,7 @@ def test_cast_ordered_zero_rays():
 def test_cast_ordered_zero_hits():
     """Rays that miss everything: offsets all zero, empty flat arrays."""
     tris, _ = _tri_soup(seed=24)
-    bvh = BVH(None, tris)
+    bvh = BVH(tris)
     # scene lives in [-0.1, 1.1]^3; shoot from far away, pointing away
     o = np.full((6, 3), 50.0, np.float32)
     d = np.tile(np.array([[1.0, 0.0, 0.0]], np.float32), (6, 1))

@@ -58,17 +58,18 @@ def test_refit_query_sets_bit_identical_to_rebuild(jitter):
     moved = p + np.random.default_rng(8).normal(
         0, jitter, p.shape).astype(np.float32)
     vals = G.Points(jnp.asarray(moved))
-    bvh_refit = BVH.from_tree(None, vals, refit(tree, _boxes(moved)))
-    bvh_fresh = BVH(None, vals)
+    bvh_refit = BVH.from_tree(vals, refit(tree, _boxes(moved)))
+    bvh_fresh = BVH(vals)
 
     q = jnp.asarray(_pts(48, seed=9))
     preds = P.intersects(G.Spheres(q, jnp.full((48,), 0.15, jnp.float32)))
-    ca = np.asarray(bvh_refit.count(None, preds))
-    cb = np.asarray(bvh_fresh.count(None, preds))
+    ca = np.asarray(bvh_refit.count(preds))
+    cb = np.asarray(bvh_fresh.count(preds))
     assert np.array_equal(ca, cb)
 
-    _, ia, oa = bvh_refit.query(None, preds)
-    _, ib, ob = bvh_fresh.query(None, preds)
+    ra, rb = bvh_refit.query(preds), bvh_fresh.query(preds)
+    ia, oa = ra.indices, ra.offsets
+    ib, ob = rb.indices, rb.offsets
     ia, ib, oa, ob = map(np.asarray, (ia, ib, oa, ob))
     assert np.array_equal(oa, ob)
     for i in range(48):
@@ -77,8 +78,8 @@ def test_refit_query_sets_bit_identical_to_rebuild(jitter):
 
     # kNN agrees too (fine distances are tree-independent)
     knn = P.nearest(G.Points(q), k=6)
-    da, _ = bvh_refit.knn(None, knn)
-    db, _ = bvh_fresh.knn(None, knn)
+    da = bvh_refit.query(knn).distances
+    db = bvh_fresh.query(knn).distances
     assert np.allclose(np.asarray(da), np.asarray(db), atol=1e-5)
 
 

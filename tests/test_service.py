@@ -80,18 +80,19 @@ def test_server_scatter_matches_direct_queries():
     pts = _pts(400, seed=2)
     srv = QueryServer(config=ServiceConfig(capacity=64))
     srv.create_index("default", G.Points(jnp.asarray(pts)))
-    bvh = BVH(None, G.Points(jnp.asarray(pts)))
+    bvh = BVH(G.Points(jnp.asarray(pts)))
 
     qa, qb, qc = _pts(5, 3), _pts(11, 4), _pts(7, 5)
     dirs = np.random.default_rng(6).normal(size=(7, DIM)).astype(np.float32)
     rs = srv.handle([knn_request(qa, k=3), within_request(qb, 0.2),
                      ray_request(qc, dirs, k=2)])
 
-    d, i = bvh.knn(None, P.nearest(G.Points(jnp.asarray(qa)), k=3))
+    kr = bvh.query(P.nearest(G.Points(jnp.asarray(qa)), k=3))
+    d, i = kr.distances, kr.indices
     assert np.allclose(rs[0].dists, np.asarray(d), atol=1e-6)
     assert np.array_equal(rs[0].idxs, np.asarray(i))
 
-    want = bvh.count(None, P.intersects(
+    want = bvh.count(P.intersects(
         G.Spheres(jnp.asarray(qb), jnp.full((11,), 0.2, jnp.float32))))
     assert np.array_equal(rs[1].counts, np.asarray(want))
     assert not rs[1].overflow

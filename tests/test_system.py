@@ -34,7 +34,7 @@ def test_halo_finder_pipeline():
     # center, callback-sum member coordinates (callback runs on matches
     # only — §2.2's "no intermediate storage" pattern)
     pts = G.Points(jnp.asarray(X))
-    bvh = BVH(None, pts)
+    bvh = BVH(pts)
     for halo in range(min(n_halos, 3)):
         members = np.where(lab == halo)[0]
         radius = np.linalg.norm(X[members] - com[halo], axis=1).max() * 1.01
@@ -46,8 +46,8 @@ def test_halo_finder_pipeline():
             s, c = state
             return (s + value.coords, c + 1), jnp.bool_(False)
 
-        s0 = (jnp.zeros((1, 3)), jnp.zeros((1,), jnp.int32))
-        (ssum, scount) = bvh.query_callback(None, q, cb, s0)
+        s0 = (jnp.zeros((3,)), jnp.int32(0))
+        (ssum, scount) = bvh.query(q, callback=(cb, s0))
         got_com = np.asarray(ssum[0]) / float(scount[0])
         # ball may include a few non-members; CoM still lands close
         assert np.linalg.norm(got_com - com[halo]) < 0.05
