@@ -1,0 +1,139 @@
+"""Seeded load generator for the async serving pipeline (DESIGN.md §7).
+
+Drives heterogeneous kNN / within / ray traffic through
+``ServingPipeline`` at a configurable Poisson arrival rate *while index
+updates stream in the background*, and records what a serving system is
+actually judged on: p50/p99 end-to-end latency, throughput, deadline-miss
+rate, batch occupancy — and the structural claim that zero requests ever
+stall behind a build/refit (maintenance publishes finished shadow indexes
+via the atomic swap; the serving loop only ever pins).
+
+``main()`` returns the metrics dict; ``run.py`` merges it into
+``BENCH_service.json`` under the ``"pipeline"`` key (``MERGE_INTO``).
+``--smoke`` is the seconds-scale fixed-seed tier-1 invocation
+(``scripts/tier1.sh``) so the async path is exercised on every run.
+"""
+import argparse
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import geometry as G
+from repro.service import (PipelineConfig, ServiceConfig, ServingPipeline,
+                           knn_request, ray_request, within_request)
+
+from ._util import row
+
+MERGE_INTO = "service"      # run.py: merge into BENCH_service.json ...
+MERGE_KEY = "pipeline"      # ... under this key
+
+FULL = dict(n_points=20_000, n_requests=200, rate_hz=25.0,
+            deadline_us=150_000.0, update_every=40, max_m=24,
+            max_bucket=64, k=8, seed=0)
+SMOKE = dict(n_points=2_000, n_requests=40, rate_hz=200.0,
+             deadline_us=50_000.0, update_every=15, max_m=12,
+             max_bucket=16, k=4, seed=0)
+
+MIX = (("knn", 0.5), ("within", 0.3), ("ray", 0.2))
+
+
+def _pct(arr, q):
+    return float(np.percentile(np.asarray(arr), q)) if len(arr) else 0.0
+
+
+def generate_load(*, n_points, n_requests, rate_hz, deadline_us,
+                  update_every, max_m, max_bucket, k, seed):
+    """One seeded run; returns the metrics dict recorded in BENCH_service."""
+    rng = np.random.default_rng(seed)
+    cfg = PipelineConfig(service=ServiceConfig(
+        capacity=16, min_bucket=8, max_bucket=max_bucket))
+    pts = rng.uniform(0, 1, (n_points, 3)).astype(np.float32)
+    kinds = [m[0] for m in MIX]
+    probs = [m[1] for m in MIX]
+
+    with ServingPipeline(config=cfg) as pipe:
+        pipe.create_index("default", G.Points(jnp.asarray(pts)))
+        pipe.warmup("default", [("knn", k), ("within", 0), ("ray", 1)])
+
+        tickets, updates = [], 0
+        t0 = time.perf_counter()
+        next_arrival = t0
+        for i in range(n_requests):
+            next_arrival += rng.exponential(1.0 / rate_hz)
+            delay = next_arrival - time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+            m = int(rng.integers(1, max_m + 1))
+            q = rng.uniform(0, 1, (m, 3)).astype(np.float32)
+            kind = rng.choice(kinds, p=probs)
+            if kind == "knn":
+                req = knn_request(q, k=k)
+            elif kind == "within":
+                req = within_request(q, 0.05)
+            else:
+                req = ray_request(q, rng.normal(size=(m, 3)).astype(
+                    np.float32), k=1)
+            tickets.append(pipe.submit(req, deadline_us=deadline_us))
+            if update_every and (i + 1) % update_every == 0:
+                drift = pts + rng.normal(0, 0.01, pts.shape).astype(np.float32)
+                pipe.update_index("default", G.Points(jnp.asarray(drift)))
+                updates += 1
+
+        responses = [t.result(timeout=120.0) for t in tickets]
+        wall = time.perf_counter() - t0
+        assert pipe.wait_maintenance_idle(120.0)
+        st = pipe.stats()
+
+    total_us = [r.stats.queue_wait_us + r.stats.service_us for r in responses]
+    waits = [r.stats.queue_wait_us for r in responses]
+    rows = sum(len(t.request.a) for t in tickets)
+    versions = sorted({r.stats.index_version for r in responses})
+    return {
+        "n_points": n_points, "n_requests": n_requests, "rate_hz": rate_hz,
+        "deadline_us": deadline_us, "seed": seed,
+        "throughput_rps": n_requests / wall,
+        "throughput_qps": rows / wall,
+        "latency_us": {"p50": _pct(total_us, 50), "p90": _pct(total_us, 90),
+                       "p99": _pct(total_us, 99),
+                       "max": float(np.max(total_us))},
+        "queue_wait_us": {"p50": _pct(waits, 50), "p99": _pct(waits, 99)},
+        "deadline_miss_rate": st.miss_rate,
+        "deadline_missed": st.deadline_missed,
+        "batches": st.batches,
+        "batch_occupancy": st.occupancy,
+        "closed": {"full": st.closed_full, "deadline": st.closed_deadline,
+                   "drain": st.closed_drain},
+        "max_queue_depth": st.max_queue_depth,
+        "updates_submitted": updates,
+        "swap_count": st.swap_count,
+        "refits": st.refits, "rebuilds": st.rebuilds,
+        "index_versions_served": versions,
+        # the structural guarantee: serving never waits on maintenance
+        "stalled_behind_maintenance": st.stalled_behind_maintenance,
+    }
+
+
+def main(smoke: bool = False):
+    out = generate_load(**(SMOKE if smoke else FULL))
+    assert out["stalled_behind_maintenance"] == 0
+    # updates coalesce per index while the worker is busy, so published
+    # swaps can undercount submissions — but some must have landed
+    assert 0 < out["swap_count"] <= out["updates_submitted"]
+    row("pipeline_latency_p50", out["latency_us"]["p50"])
+    row("pipeline_latency_p99", out["latency_us"]["p99"],
+        derived=f"miss_rate={out['deadline_miss_rate']:.3f}")
+    row("pipeline_throughput_rps", out["throughput_rps"],
+        derived=f"occupancy={out['batch_occupancy']:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale fixed-seed tier-1 invocation")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    out = main(smoke=args.smoke)
+    import json
+    print(json.dumps(out, indent=2, sort_keys=True))

@@ -27,7 +27,12 @@ MODULES = [
     "bench_mls",            # §1 interpolation
     "bench_distributed",    # §2.3 callback comm saving + weak scaling
     "bench_service",        # DESIGN.md §5 refit + bucketed serving
+    "bench_pipeline",       # DESIGN.md §7 async deadline-aware load gen
 ]
+
+# JSON keys owned by MERGE_INTO modules, preserved when the owning module
+# rewrites its file: BENCH_<suffix>.json -> keys to carry over
+PRESERVE = {"service": ("pipeline",)}
 
 
 def main():
@@ -38,12 +43,32 @@ def main():
         if only and name not in only:
             continue
         try:
-            out = importlib.import_module(f"benchmarks.{name}").main()
+            mod = importlib.import_module(f"benchmarks.{name}")
+            out = mod.main()
             if isinstance(out, dict):
-                path = os.path.join(
-                    REPO, f"BENCH_{name.removeprefix('bench_')}.json")
+                # a module may target another module's JSON (MERGE_INTO):
+                # bench_pipeline folds its metrics into BENCH_service.json
+                # under MERGE_KEY instead of owning a separate file
+                target = getattr(mod, "MERGE_INTO", None)
+                suffix = target or name.removeprefix("bench_")
+                path = os.path.join(REPO, f"BENCH_{suffix}.json")
+                old = {}
+                if os.path.exists(path):
+                    with open(path) as f:
+                        old = json.load(f)
+                if target is not None:
+                    data = old
+                    key = getattr(mod, "MERGE_KEY",
+                                  name.removeprefix("bench_"))
+                    data[key] = out
+                else:
+                    # keep sections owned by merge modules (a bench_service-
+                    # only run must not drop the pipeline metrics)
+                    data = {k: v for k, v in old.items()
+                            if k in PRESERVE.get(suffix, ())}
+                    data.update(out)
                 with open(path, "w") as f:
-                    json.dump(out, f, indent=2, sort_keys=True)
+                    json.dump(data, f, indent=2, sort_keys=True)
                 print(f"# wrote {os.path.basename(path)}", file=sys.stderr)
         except Exception:
             failed.append(name)

@@ -17,5 +17,10 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # DeprecationWarnings are errors: the legacy API-v1 spellings (space-first
 # query/count/knn, DistributedTree query_knn-style methods) are warn-once
 # shims, so any in-repo call site that sneaks back in fails tier-1 here.
-exec python -m pytest -q -p no:cacheprovider \
+python -m pytest -q -p no:cacheprovider \
     -W error::DeprecationWarning "$@"
+
+# async-pipeline smoke (seconds-scale, fixed seed, tiny N): exercises the
+# deadline scheduler + background maintenance swap on every tier-1 run.
+# Prints metrics only — run.py owns persisting them to BENCH_service.json.
+python -m benchmarks.bench_pipeline --smoke

@@ -1,24 +1,34 @@
-"""Online geometric query service (DESIGN.md §5).
+"""Online geometric query service (DESIGN.md §5, §7).
 
 The production analogue of ArborX 2.0's unified query interface: a
-synchronous frontend that serves heterogeneous spatial / kNN / ray traffic
+service layer that answers heterogeneous spatial / kNN / ray traffic
 over *live* indexes.
 
   * :mod:`index_store` — versioned index registry with atomic
-    build-and-swap and refit-or-rebuild updates (``lbvh.refit`` + the SAH
-    quality monitor).
+    build-and-swap, refit-or-rebuild updates (``lbvh.refit`` + the SAH
+    quality monitor), and pinned versions for in-flight batches.
   * :mod:`batcher`     — shape-bucketed micro-batching: requests are
     grouped by predicate kind and padded to power-of-two buckets so every
     dispatch hits a warm jitted executable.
-  * :mod:`server`      — ``QueryServer`` tying registry + batcher +
-    ``QueryEngine`` together, with per-request stats (route, bucket,
-    index version).
+  * :mod:`server`      — synchronous ``QueryServer`` tying registry +
+    batcher + ``QueryEngine`` together, with per-request stats (route,
+    bucket, index version).
+  * :mod:`pipeline`    — asynchronous, deadline-aware ``ServingPipeline``:
+    clients ``submit(request, deadline_us=...)`` into a queue, a
+    scheduler thread forms adaptive batches (close on full OR on deadline
+    budget), and a background maintenance worker refits/rebuilds shadow
+    indexes and publishes via the atomic swap — maintenance never blocks
+    serving.
 """
-from .batcher import (Batcher, Request, knn_request, ray_request,
-                      within_request)
+from .batcher import (SUPPORTED_KINDS, Batcher, Request, knn_request,
+                      ray_request, within_request)
 from .index_store import IndexStore, IndexVersion
-from .server import QueryServer, Response, ServiceConfig
+from .pipeline import PipelineConfig, PipelineStats, ServingPipeline, Ticket
+from .server import (QueryServer, RequestStats, Response, ServiceConfig,
+                     execute_group)
 
-__all__ = ["Batcher", "Request", "knn_request", "ray_request",
-           "within_request", "IndexStore", "IndexVersion", "QueryServer",
-           "Response", "ServiceConfig"]
+__all__ = ["Batcher", "Request", "SUPPORTED_KINDS", "knn_request",
+           "ray_request", "within_request", "IndexStore", "IndexVersion",
+           "QueryServer", "RequestStats", "Response", "ServiceConfig",
+           "execute_group", "ServingPipeline", "PipelineConfig",
+           "PipelineStats", "Ticket"]

@@ -22,11 +22,21 @@ import dataclasses
 import numpy as np
 
 __all__ = ["Request", "Group", "Batcher", "knn_request", "within_request",
-           "ray_request", "bucket_size"]
+           "ray_request", "bucket_size", "SUPPORTED_KINDS", "validate_kind"]
 
 KIND_KNN = "knn"
 KIND_WITHIN = "within"
 KIND_RAY = "ray"
+SUPPORTED_KINDS = (KIND_KNN, KIND_WITHIN, KIND_RAY)
+
+
+def validate_kind(kind):
+    """Reject unknown predicate kinds up front, naming the supported set —
+    an unknown kind must fail at enqueue time, not as an opaque shape error
+    deep inside a later dispatch."""
+    if kind not in SUPPORTED_KINDS:
+        raise ValueError(f"unknown request kind {kind!r}; supported kinds "
+                         f"are {SUPPORTED_KINDS}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,8 +54,7 @@ class Request:
     index: str = "default"
 
     def __post_init__(self):
-        if self.kind not in (KIND_KNN, KIND_WITHIN, KIND_RAY):
-            raise ValueError(f"unknown request kind {self.kind!r}")
+        validate_kind(self.kind)
         if self.kind != KIND_KNN and self.b is None:
             raise ValueError(f"{self.kind!r} requests need both arrays")
         if len(self.a) == 0:
@@ -123,6 +132,10 @@ class Batcher:
     def plan(self, requests: list[Request]) -> list[Group]:
         by_key: dict[tuple, list[tuple[int, Request]]] = {}
         for rid, req in enumerate(requests):
+            # re-validate here: Request.__post_init__ already checks, but a
+            # subclass (or a replace() that skipped it) must still fail with
+            # the named-kind error, not a shape error inside the engine
+            validate_kind(req.kind)
             by_key.setdefault(self.group_key(req), []).append((rid, req))
 
         groups = []

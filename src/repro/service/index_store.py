@@ -59,6 +59,7 @@ class IndexStore:
         self._lock = threading.Lock()
         self._live: dict[str, IndexVersion] = {}
         self._history: dict[str, dict[int, IndexVersion]] = {}
+        self._pins: dict[tuple[str, int], int] = {}
 
     # -- reads -------------------------------------------------------------
     def get(self, name: str, version: int | None = None) -> IndexVersion:
@@ -70,6 +71,35 @@ class IndexStore:
     def names(self) -> list[str]:
         with self._lock:
             return sorted(self._live)
+
+    # -- pinning -----------------------------------------------------------
+    # In-flight batches dispatch against ONE version grabbed at formation
+    # time. A pin is a refcount on (name, version): while it is held the
+    # version stays resolvable through get() even if later swaps roll the
+    # history ring past ``keep_versions``. The IndexVersion object itself is
+    # immutable, so a pinned reader can never observe a torn index — the pin
+    # only extends *registry* lifetime, which matters to anything that
+    # re-resolves by version number mid-batch.
+
+    def pin(self, name: str, version: int | None = None) -> IndexVersion:
+        """Grab the live (or a specific) version and hold it against history
+        eviction until the matching :meth:`release`."""
+        with self._lock:
+            entry = (self._live[name] if version is None
+                     else self._history[name][version])
+            key = (entry.name, entry.version)
+            self._pins[key] = self._pins.get(key, 0) + 1
+            return entry
+
+    def release(self, entry: IndexVersion):
+        with self._lock:
+            key = (entry.name, entry.version)
+            n = self._pins.get(key, 0) - 1
+            if n <= 0:
+                self._pins.pop(key, None)
+            else:
+                self._pins[key] = n
+            self._trim(entry.name)
 
     # -- writes ------------------------------------------------------------
     def build(self, name: str, values,
@@ -119,6 +149,15 @@ class IndexStore:
             self._live[entry.name] = entry
             hist = self._history.setdefault(entry.name, {})
             hist[entry.version] = entry
-            while len(hist) > self.keep_versions:
-                del hist[min(hist)]
+            self._trim(entry.name)
         return entry
+
+    def _trim(self, name: str):
+        """Evict unpinned versions beyond keep_versions (lock held). The
+        newest keep_versions entries are always retained — a pinned old
+        version must never push the LIVE version out of history — and
+        pinned older ones are skipped; they evict on release."""
+        hist = self._history.get(name, {})
+        for v in sorted(hist)[:-self.keep_versions]:
+            if (name, v) not in self._pins:
+                del hist[v]

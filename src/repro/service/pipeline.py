@@ -1,0 +1,433 @@
+"""Async deadline-aware serving pipeline (DESIGN.md §7).
+
+The synchronous ``QueryServer`` answers whatever batch the caller hands
+it; this module models the *live* half of the problem: many independent
+clients submitting single requests with latency budgets, while the
+geometry underneath keeps moving. Three actors, three threads:
+
+  * clients call :meth:`ServingPipeline.submit` — validate, timestamp,
+    enqueue into the per-group pending queue, get a :class:`Ticket`
+    (future) back. Never blocks on JAX.
+  * ONE scheduler thread forms shape-bucketed batches *adaptively*: a
+    group closes when it holds ``max_bucket`` rows (full) or when the
+    tightest queued deadline budget — minus the EWMA-measured service
+    estimate for the bucket it would ride in, minus a slack — is about to
+    be spent. Closed groups dispatch through the engine's warm executable
+    cache against a **pinned** ``IndexStore`` version, then results
+    scatter back into the tickets with full timing stats.
+  * ONE maintenance thread owns index refresh: :meth:`update_index`
+    enqueues (coalescing to the newest values per index) and returns
+    immediately; the worker runs refit-or-rebuild in a shadow index
+    (``IndexStore.update`` builds OUTSIDE the registry lock) and
+    publishes via the store's atomic version swap. The serving loop never
+    waits on a build — in-flight batches finish on their pinned version
+    and the next formed batch picks up the new one.
+
+Deadline accounting: a request submitted at t with ``deadline_us=D`` is
+on time iff results are delivered by t + D. The scheduler therefore
+closes the group no later than ``t + D - est_service(bucket) - slack``,
+where est_service is an exponentially weighted average of measured batch
+service times per (group key, bucket). Requests without a deadline ride
+with whoever closes the bucket, capped by ``max_linger_us`` so an idle
+trickle still flows.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+
+from ..core import engine as E
+from ..core.access import default_indexable_getter
+from .batcher import Batcher, Request, bucket_size, validate_kind
+from .index_store import IndexStore, IndexVersion
+from .server import Response, ServiceConfig, execute_group
+
+__all__ = ["PipelineConfig", "PipelineStats", "Ticket", "ServingPipeline"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    """service: the bucket ladder / capacity / rebuild knobs shared with the
+    synchronous server (``service.max_bucket`` is the adaptive batcher's
+    "full" threshold).
+    max_linger_us: a group holding only deadline-less requests closes once
+    its oldest member has waited this long.
+    deadline_slack_us: safety margin subtracted from every deadline budget
+    (scheduler wakeup jitter + scatter cost).
+    default_service_est_us: assumed batch service time for a (key, bucket)
+    never measured before (cold caches are far slower than this — the
+    first dispatch of a bucket is expected to miss tight deadlines).
+    est_alpha: EWMA weight of the newest service-time measurement.
+    est_safety: multiplier on the estimate when budgeting a close — the
+    EWMA tracks the MEAN service time, but a close cut at the mean misses
+    half the time (service jitter + dispatches queueing behind other
+    groups on the single scheduler thread), so budget conservatively."""
+    service: ServiceConfig = ServiceConfig()
+    max_linger_us: float = 5_000.0
+    deadline_slack_us: float = 2_000.0
+    default_service_est_us: float = 20_000.0
+    est_alpha: float = 0.3
+    est_safety: float = 1.5
+
+
+@dataclasses.dataclass
+class PipelineStats:
+    """Pipeline-level counters (snapshot via ``ServingPipeline.stats()``).
+
+    Occupancy is ``batch_rows / batch_slots`` — how much of each dispatched
+    bucket carried real queries. ``stalled_behind_maintenance`` counts
+    dispatches that had to wait for an in-progress build/refit; the design
+    makes that impossible (maintenance publishes finished indexes via the
+    atomic swap), so the benchmark pins it at zero.
+    """
+    submitted: int = 0
+    served: int = 0
+    failed: int = 0
+    deadline_missed: int = 0
+    batches: int = 0
+    batch_rows: int = 0            # real rows dispatched
+    batch_slots: int = 0           # bucket slots dispatched
+    closed_full: int = 0           # group reached max_bucket rows
+    closed_deadline: int = 0       # deadline budget forced the close
+    closed_drain: int = 0          # pipeline shutdown flush
+    queue_depth: int = 0           # gauge: requests waiting right now
+    max_queue_depth: int = 0
+    swap_count: int = 0            # maintenance publishes (refits + rebuilds)
+    refits: int = 0
+    rebuilds: int = 0
+    maintenance_pending: int = 0   # gauge: queued + in-flight updates
+    maintenance_errors: int = 0
+    stalled_behind_maintenance: int = 0
+
+    @property
+    def occupancy(self) -> float:
+        return self.batch_rows / self.batch_slots if self.batch_slots else 0.0
+
+    @property
+    def miss_rate(self) -> float:
+        return self.deadline_missed / self.served if self.served else 0.0
+
+    def snapshot(self) -> "PipelineStats":
+        return dataclasses.replace(self)
+
+
+class Ticket:
+    """Future for one submitted request. ``result()`` blocks until the
+    scheduler delivers the :class:`Response` (or re-raises the dispatch
+    failure); ``stats`` on the response carries queue_wait_us / service_us
+    / deadline_missed alongside the usual route/bucket/version fields."""
+
+    __slots__ = ("request", "deadline_us", "t_submit", "_event", "_response",
+                 "_error")
+
+    def __init__(self, request: Request, deadline_us: float | None,
+                 t_submit: float):
+        self.request = request
+        self.deadline_us = deadline_us
+        self.t_submit = t_submit
+        self._event = threading.Event()
+        self._response: Response | None = None
+        self._error: BaseException | None = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None) -> Response:
+        if not self._event.wait(timeout):
+            raise TimeoutError("request not served within "
+                               f"{timeout}s (pipeline running?)")
+        if self._error is not None:
+            raise self._error
+        return self._response
+
+    # scheduler-side
+    def _complete(self, response: Response):
+        self._response = response
+        self._event.set()
+
+    def _fail(self, error: BaseException):
+        self._error = error
+        self._event.set()
+
+
+class ServingPipeline:
+    """Deadline-aware async frontend over IndexStore + Batcher + engine."""
+
+    def __init__(self, store: IndexStore | None = None,
+                 engine: E.QueryEngine | None = None,
+                 config: PipelineConfig | None = None):
+        self.config = config or PipelineConfig()
+        svc = self.config.service
+        if store is not None:
+            self.store = store
+            self.engine = engine if engine is not None else store.engine
+        else:
+            self.engine = engine if engine is not None else E.QueryEngine()
+            self.store = IndexStore(
+                self.engine, rebuild_threshold=svc.rebuild_threshold)
+        self.batcher = Batcher(svc.min_bucket)
+
+        self._cv = threading.Condition()            # queues + stats
+        self._queues: dict[tuple, collections.deque[Ticket]] = {}
+        self._est: dict[tuple, float] = {}          # (key, bucket) -> EWMA us
+        self._stats = PipelineStats()
+        self._closing = False
+
+        self._maint_cv = threading.Condition()      # maintenance inbox
+        self._maint: collections.OrderedDict[str, object] = \
+            collections.OrderedDict()
+        self._maint_inflight = 0
+
+        self._scheduler = threading.Thread(
+            target=self._run_scheduler, name="repro-pipeline-scheduler",
+            daemon=True)
+        self._maintainer = threading.Thread(
+            target=self._run_maintenance, name="repro-pipeline-maintenance",
+            daemon=True)
+        self._scheduler.start()
+        self._maintainer.start()
+
+    # -- lifecycle ----------------------------------------------------------
+    def __enter__(self) -> "ServingPipeline":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def close(self, timeout: float = 30.0):
+        """Drain: serve everything already submitted, finish queued
+        maintenance, stop both threads. Idempotent."""
+        with self._cv:
+            self._closing = True
+            self._cv.notify_all()
+        with self._maint_cv:
+            self._maint_cv.notify_all()
+        self._scheduler.join(timeout)
+        self._maintainer.join(timeout)
+
+    # -- index lifecycle ----------------------------------------------------
+    def create_index(self, name: str, values,
+                     indexable_getter=default_indexable_getter) -> IndexVersion:
+        """Synchronous initial build — serving needs version 1 to exist."""
+        return self.store.build(name, values, indexable_getter)
+
+    def update_index(self, name: str, values):
+        """Enqueue a refresh of `name` to moved `values` and return
+        immediately; the maintenance worker refits-or-rebuilds a shadow
+        index and publishes it via the store's atomic swap. Updates for
+        the same name coalesce to the newest values (a moving-points
+        stream only ever needs the latest geometry)."""
+        with self._maint_cv:
+            if self._closing:
+                raise RuntimeError("pipeline is closed")
+            self._maint[name] = values
+            with self._cv:
+                self._stats.maintenance_pending = \
+                    len(self._maint) + self._maint_inflight
+            self._maint_cv.notify()
+
+    def wait_maintenance_idle(self, timeout: float = 30.0) -> bool:
+        """Block until no update is queued or in flight (for tests/benches
+        that need a published version before asserting)."""
+        deadline = time.perf_counter() + timeout
+        with self._maint_cv:
+            while self._maint or self._maint_inflight:
+                left = deadline - time.perf_counter()
+                if left <= 0:
+                    return False
+                self._maint_cv.wait(left)
+        return True
+
+    # -- serving ------------------------------------------------------------
+    def submit(self, request: Request, *,
+               deadline_us: float | None = None) -> Ticket:
+        """Enqueue one request; returns a Ticket future. `deadline_us` is
+        the total latency budget from this call; None = best effort
+        (bounded by max_linger_us of batching delay)."""
+        validate_kind(request.kind)
+        ticket = Ticket(request, deadline_us, time.perf_counter())
+        with self._cv:
+            if self._closing:
+                raise RuntimeError("pipeline is closed")
+            key = self.batcher.group_key(request)
+            self._queues.setdefault(key, collections.deque()).append(ticket)
+            self._stats.submitted += 1
+            self._stats.queue_depth += 1
+            self._stats.max_queue_depth = max(self._stats.max_queue_depth,
+                                              self._stats.queue_depth)
+            self._cv.notify()
+        return ticket
+
+    def stats(self) -> PipelineStats:
+        with self._cv:
+            return self._stats.snapshot()
+
+    def warmup(self, index: str, kinds_ks=None, max_bucket=None, dim=None):
+        """Pre-trace the bucket ladder through the shared executable cache
+        (same contract as ``QueryServer.warmup`` — all three kinds by
+        default)."""
+        from .server import QueryServer
+        QueryServer(self.store, self.engine, self.config.service).warmup(
+            index, kinds_ks, max_bucket, dim)
+
+    # -- scheduler ----------------------------------------------------------
+    def _close_by(self, key: tuple, tickets: collections.deque[Ticket],
+                  now: float) -> float:
+        """Absolute perf_counter time by which this group must dispatch:
+        min over members of (submit + budget) - service estimate - slack."""
+        cfg = self.config
+        rows = sum(t.request.m for t in tickets)
+        est = self._est.get((key, bucket_size(rows, self.batcher.min_bucket)),
+                            cfg.default_service_est_us) * cfg.est_safety
+        close = float("inf")
+        for t in tickets:
+            budget = t.deadline_us if t.deadline_us is not None \
+                else cfg.max_linger_us
+            close = min(close,
+                        t.t_submit + (budget - est - cfg.deadline_slack_us)
+                        * 1e-6)
+        return close
+
+    def _pick(self, now: float):
+        """Under the lock: choose one group ready to dispatch (full, out of
+        deadline budget, or draining). Returns (key, tickets, reason) or
+        (None, None, wait_seconds)."""
+        max_rows = self.config.service.max_bucket
+        wait = None
+        for key, q in self._queues.items():
+            if not q:
+                continue
+            rows = sum(t.request.m for t in q)
+            if rows >= max_rows or self._closing:
+                reason = "drain" if self._closing and rows < max_rows \
+                    else "full"
+                # take members up to max_bucket rows (always >= 1 request:
+                # a single over-sized request dispatches alone at its
+                # natural bucket)
+                taken, acc = [], 0
+                while q and (not taken or acc + q[0].request.m <= max_rows):
+                    t = q.popleft()
+                    taken.append(t)
+                    acc += t.request.m
+                return key, taken, reason
+            close = self._close_by(key, q, now)
+            if now >= close:
+                taken = list(q)
+                q.clear()
+                return key, taken, "deadline"
+            wait = close - now if wait is None else min(wait, close - now)
+        return None, None, wait
+
+    def _run_scheduler(self):
+        while True:
+            with self._cv:
+                while True:
+                    key, taken, extra = self._pick(time.perf_counter())
+                    if taken is not None:
+                        self._stats.queue_depth -= len(taken)
+                        break
+                    if self._closing:
+                        return
+                    # extra is seconds until the earliest forced close (or
+                    # None when idle); clamp so a just-passed deadline
+                    # doesn't busy-spin
+                    self._cv.wait(None if extra is None else max(extra, 1e-4))
+            self._dispatch(key, taken, extra)
+
+    def _dispatch(self, key: tuple, tickets: list[Ticket], reason: str):
+        """Outside the lock: pin -> execute -> scatter -> account."""
+        group = self.batcher.plan([t.request for t in tickets])[0]
+        t_disp = time.perf_counter()
+        try:
+            entry = self.store.pin(group.index)
+        except KeyError as err:
+            miss = KeyError(f"no index named {group.index!r} "
+                            "(create_index before submitting)")
+            miss.__cause__ = err
+            with self._cv:
+                self._stats.failed += len(tickets)
+            for t in tickets:
+                t._fail(miss)
+            return
+        try:
+            responses = execute_group(self.engine, self.config.service,
+                                      entry, group)
+        except Exception as err:
+            with self._cv:
+                self._stats.failed += len(tickets)
+            for t in tickets:
+                t._fail(err)
+            return
+        finally:
+            self.store.release(entry)
+        t_done = time.perf_counter()
+
+        service_us = (t_done - t_disp) * 1e6
+        missed = 0
+        for rid, ticket in enumerate(tickets):
+            resp = responses[rid]
+            total_us = (t_done - ticket.t_submit) * 1e6
+            late = (ticket.deadline_us is not None
+                    and total_us > ticket.deadline_us)
+            missed += late
+            stats = dataclasses.replace(
+                resp.stats,
+                queue_wait_us=(t_disp - ticket.t_submit) * 1e6,
+                service_us=service_us, deadline_us=ticket.deadline_us,
+                deadline_missed=late)
+            ticket._complete(dataclasses.replace(resp, stats=stats))
+
+        ewma_key = (key, group.bucket)
+        with self._cv:
+            prev = self._est.get(ewma_key)
+            a = self.config.est_alpha
+            self._est[ewma_key] = service_us if prev is None \
+                else a * service_us + (1 - a) * prev
+            s = self._stats
+            s.served += len(tickets)
+            s.deadline_missed += missed
+            s.batches += 1
+            s.batch_rows += group.n_real
+            s.batch_slots += group.bucket
+            if reason == "full":
+                s.closed_full += 1
+            elif reason == "deadline":
+                s.closed_deadline += 1
+            else:
+                s.closed_drain += 1
+
+    # -- maintenance --------------------------------------------------------
+    def _run_maintenance(self):
+        while True:
+            with self._maint_cv:
+                while not self._maint:
+                    if self._closing:
+                        return
+                    self._maint_cv.wait()
+                name, values = self._maint.popitem(last=False)
+                self._maint_inflight += 1
+            action, failed = None, False
+            try:
+                # the slow part: shadow build/refit outside every lock the
+                # serving path touches; publication inside is one dict swap
+                action = self.store.update(name, values).action
+            except Exception:
+                failed = True
+            finally:
+                with self._maint_cv:
+                    self._maint_inflight -= 1
+                    pending = len(self._maint) + self._maint_inflight
+                    self._maint_cv.notify_all()
+            with self._cv:
+                s = self._stats
+                s.maintenance_pending = pending
+                if failed:
+                    s.maintenance_errors += 1
+                else:
+                    s.swap_count += 1
+                    if action == "refit":
+                        s.refits += 1
+                    else:
+                        s.rebuilds += 1

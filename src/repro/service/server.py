@@ -24,7 +24,8 @@ from .batcher import (KIND_KNN, KIND_RAY, KIND_WITHIN, Batcher, Group,
                       within_request)
 from .index_store import IndexStore, IndexVersion
 
-__all__ = ["ServiceConfig", "RequestStats", "Response", "QueryServer"]
+__all__ = ["ServiceConfig", "RequestStats", "Response", "QueryServer",
+           "execute_group"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,11 +34,15 @@ class ServiceConfig:
     every within bucket reuses one executable; requests that overflow it
     are flagged (callers needing exact spill re-issue via ``BVH.query``,
     which auto-retries with doubled capacity).
-    min_bucket: smallest (and alignment of) power-of-two bucket.
+    min_bucket / max_bucket: the power-of-two bucket ladder — min_bucket is
+    the smallest (and alignment of) bucket, max_bucket the largest batch
+    one dispatch carries (warmup covers the whole ladder; the async
+    pipeline closes a group when it reaches max_bucket rows).
     rebuild_threshold: SAH degradation ratio that turns a refit into a
     full rebuild (forwarded to the IndexStore the server creates)."""
     capacity: int = 64
     min_bucket: int = 8
+    max_bucket: int = 128
     rebuild_threshold: float = 1.5
 
 
@@ -49,6 +54,11 @@ class RequestStats:
     index_name: str
     index_version: int
     cache_hit: bool       # executable was already warm
+    # async-pipeline timing (zero on the synchronous QueryServer path):
+    queue_wait_us: float = 0.0    # submit -> batch dispatch
+    service_us: float = 0.0       # batch dispatch -> results ready
+    deadline_us: float | None = None
+    deadline_missed: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +72,67 @@ class Response:
     idxs: np.ndarray | None = None
     counts: np.ndarray | None = None
     overflow: bool = False
+
+
+def execute_group(engine: E.QueryEngine, config: ServiceConfig,
+                  entry: IndexVersion, group: Group) -> dict[int, "Response"]:
+    """Dispatch ONE planned group against a pinned index version and scatter
+    the bucket results back to per-request Responses (keyed by the request
+    ids recorded in ``group.members``). Shared by the synchronous
+    ``QueryServer.handle`` and the async ``ServingPipeline`` — the caller
+    owns version pinning and any timing bookkeeping."""
+    bvh = entry.bvh
+    a = jnp.asarray(group.a)
+    # degenerate indexes (N < 2) have no tree; the engine's cached
+    # executables need one, but the BVH API itself linear-scans — a
+    # cloud that shrinks to one point must not take down serving
+    tiny = bvh.tree is None
+    info = E.ExecInfo(E.ROUTE_LOOP, False) if tiny else None
+
+    overflow_rows = None
+    if group.kind == KIND_WITHIN:
+        preds = P.intersects(G.Spheres(a, jnp.asarray(group.b)))
+        if tiny:
+            counts, buf = bvh._fill_impl(preds, config.capacity, bvh.policy)
+        else:
+            (counts, buf), info = engine.exec_spatial(
+                bvh, preds, config.capacity)
+        counts, buf = np.asarray(counts), np.asarray(buf)
+        overflow_rows = counts > config.capacity
+        res_rows = (counts, buf)
+    elif group.kind == KIND_KNN:
+        preds = P.nearest(G.Points(a), k=group.k)
+        if tiny:
+            res = bvh.query(preds)
+            d, i = res.distances, res.indices
+        else:
+            (d, i), info = engine.exec_knn(bvh, preds)
+        res_rows = (np.asarray(d), np.asarray(i))
+    else:  # KIND_RAY
+        rays = G.Rays(a, jnp.asarray(group.b))
+        if tiny:
+            res = bvh.query(P.RayNearest(rays, group.k))
+            d, i = res.distances, res.indices
+        else:
+            (d, i), info = engine.exec_ray_nearest(bvh, rays, group.k)
+        res_rows = (np.asarray(d), np.asarray(i))
+
+    out: dict[int, Response] = {}
+    for rid, start, m in group.members:
+        stats = RequestStats(kind=group.kind, route=info.route,
+                             bucket=group.bucket, index_name=entry.name,
+                             index_version=entry.version,
+                             cache_hit=info.cache_hit)
+        sl = slice(start, start + m)
+        if group.kind == KIND_WITHIN:
+            counts, buf = res_rows
+            out[rid] = Response(
+                stats, counts=counts[sl], idxs=buf[sl],
+                overflow=bool(overflow_rows[sl].any()))
+        else:
+            d, i = res_rows
+            out[rid] = Response(stats, dists=d[sl], idxs=i[sl])
+    return out
 
 
 class QueryServer:
@@ -97,11 +168,30 @@ class QueryServer:
             self._dispatch(group, responses)
         return responses  # type: ignore[return-value]
 
-    def warmup(self, index: str, kinds_ks: list[tuple[str, int]],
-               max_bucket: int, dim: int):
+    def warmup(self, index: str, kinds_ks: list[tuple[str, int]] | None = None,
+               max_bucket: int | None = None, dim: int | None = None,
+               default_ks: tuple[int, ...] = (1,)):
         """Pre-trace every (kind, k, bucket) executable for buckets up to
         (and including) the one `max_bucket` queries would ride in, so live
-        traffic sees only warm dispatches."""
+        traffic sees only warm dispatches.
+
+        ALL THREE kinds are warmed by default: any kind absent from
+        `kinds_ks` (or all of them, when it is None) is warmed with
+        `default_ks` (within always rides k=0 — k doesn't shape its
+        result). `max_bucket` defaults to the configured ladder top and
+        `dim` is read off the index, so ``warmup("default")`` alone leaves
+        no cold route behind."""
+        kinds_ks = list(kinds_ks or [])
+        have = {kind for kind, _ in kinds_ks}
+        for kind in (KIND_KNN, KIND_WITHIN, KIND_RAY):
+            if kind not in have:
+                kinds_ks += [(kind, 0)] if kind == KIND_WITHIN else \
+                            [(kind, k) for k in default_ks]
+        if max_bucket is None:
+            max_bucket = self.config.max_bucket
+        if dim is None:
+            dim = int(self.store.get(index).bvh._boxes.dim)
+
         b = self.config.min_bucket
         top = bucket_size(max_bucket, self.config.min_bucket)
         while b <= top:
@@ -121,55 +211,6 @@ class QueryServer:
     # -- internals ---------------------------------------------------------
     def _dispatch(self, group: Group, responses: list):
         entry = self.store.get(group.index)
-        bvh = entry.bvh
-        a = jnp.asarray(group.a)
-        # degenerate indexes (N < 2) have no tree; the engine's cached
-        # executables need one, but the BVH API itself linear-scans — a
-        # cloud that shrinks to one point must not take down serving
-        tiny = bvh.tree is None
-        info = E.ExecInfo(E.ROUTE_LOOP, False) if tiny else None
-
-        overflow_rows = None
-        if group.kind == KIND_WITHIN:
-            preds = P.intersects(G.Spheres(a, jnp.asarray(group.b)))
-            if tiny:
-                counts, buf = bvh._fill_impl(preds, self.config.capacity,
-                                             bvh.policy)
-            else:
-                (counts, buf), info = self.engine.exec_spatial(
-                    bvh, preds, self.config.capacity)
-            counts, buf = np.asarray(counts), np.asarray(buf)
-            overflow_rows = counts > self.config.capacity
-            res_rows = (counts, buf)
-        elif group.kind == KIND_KNN:
-            preds = P.nearest(G.Points(a), k=group.k)
-            if tiny:
-                res = bvh.query(preds)
-                d, i = res.distances, res.indices
-            else:
-                (d, i), info = self.engine.exec_knn(bvh, preds)
-            res_rows = (np.asarray(d), np.asarray(i))
-        else:  # KIND_RAY
-            rays = G.Rays(a, jnp.asarray(group.b))
-            if tiny:
-                res = bvh.query(P.RayNearest(rays, group.k))
-                d, i = res.distances, res.indices
-            else:
-                (d, i), info = self.engine.exec_ray_nearest(
-                    bvh, rays, group.k)
-            res_rows = (np.asarray(d), np.asarray(i))
-
-        for rid, start, m in group.members:
-            stats = RequestStats(kind=group.kind, route=info.route,
-                                 bucket=group.bucket, index_name=entry.name,
-                                 index_version=entry.version,
-                                 cache_hit=info.cache_hit)
-            sl = slice(start, start + m)
-            if group.kind == KIND_WITHIN:
-                counts, buf = res_rows
-                responses[rid] = Response(
-                    stats, counts=counts[sl], idxs=buf[sl],
-                    overflow=bool(overflow_rows[sl].any()))
-            else:
-                d, i = res_rows
-                responses[rid] = Response(stats, dists=d[sl], idxs=i[sl])
+        for rid, resp in execute_group(self.engine, self.config,
+                                       entry, group).items():
+            responses[rid] = resp

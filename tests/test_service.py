@@ -59,6 +59,21 @@ def test_batcher_groups_by_kind_k_and_pads():
     assert by_kind[("ray", 1)].bucket == 8
 
 
+def test_unknown_kind_rejected_at_plan_time_with_named_set():
+    """A request whose kind dodged construction-time validation must fail
+    at enqueue with an error naming the kind AND the supported set — not
+    as an opaque shape error inside a later dispatch."""
+    from repro.service.batcher import Request
+    bogus = object.__new__(Request)
+    for field, val in (("kind", "voxel"), ("a", _pts(3, 1)), ("b", None),
+                       ("k", 1), ("index", "default")):
+        object.__setattr__(bogus, field, val)
+    with pytest.raises(ValueError, match=r"voxel.*knn.*within.*ray"):
+        Batcher().plan([bogus])
+    with pytest.raises(ValueError, match=r"voxel.*knn.*within.*ray"):
+        Request("voxel", _pts(3, 1))
+
+
 def test_batcher_rejects_bad_requests():
     with pytest.raises(ValueError, match="kind"):
         knn_request(_pts(3, 1), k=1).__class__(
@@ -251,6 +266,41 @@ def test_exec_cache_lru_eviction_bounded():
     assert len(eng._executables) == 1
     srv.handle([within_request(_pts(5, 41), 0.1)])    # bucket 8: re-miss
     assert eng.stats.cache_misses == 3 and eng.stats.cache_hits == 0
+
+
+def test_warmup_defaults_warm_all_three_kinds_zero_cold_dispatch():
+    """warmup(index) alone must cover the whole configured bucket ladder
+    for ALL kinds — historically the ray route was silently skipped when
+    no ray request appeared in the warmup mix."""
+    srv = _server(300, seed=60, capacity=8,
+                  config=ServiceConfig(capacity=8, min_bucket=8,
+                                       max_bucket=32))
+    srv.warmup("default")                      # no kinds, no bucket, no dim
+    before = srv.engine.stats.snapshot()
+
+    rng = np.random.default_rng(61)
+    for m in (3, 9, 30):                       # buckets 8, 16, 32
+        q = rng.uniform(0, 1, (m, DIM)).astype(np.float32)
+        d = rng.normal(size=(m, DIM)).astype(np.float32)
+        rs = srv.handle([knn_request(q, k=1), within_request(q, 0.1),
+                         ray_request(q, d, k=1)])
+        assert all(r.stats.cache_hit for r in rs)
+    after = srv.engine.stats
+    assert after.jit_traces == before.jit_traces      # zero cold dispatches
+    assert after.cache_misses == before.cache_misses
+
+
+def test_warmup_explicit_kinds_still_cover_missing_ones():
+    """Passing only a knn mix must not leave ray/within cold (they warm at
+    the default k)."""
+    srv = _server(300, seed=62, capacity=8)
+    srv.warmup("default", [("knn", 8)], max_bucket=8, dim=DIM)
+    before = srv.engine.stats.snapshot()
+    q = _pts(4, 63)
+    rs = srv.handle([ray_request(q, np.ones((4, DIM), np.float32), k=1),
+                     within_request(q, 0.1)])
+    assert all(r.stats.cache_hit for r in rs)
+    assert srv.engine.stats.jit_traces == before.jit_traces
 
 
 def test_warmup_rounds_max_bucket_up_to_pow2():
