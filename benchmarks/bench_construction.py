@@ -1,5 +1,13 @@
 """§2.6 bullets 1-2: 64-bit vs 32-bit Morton construction quality/speed,
-and the RMQ vs iterative refit variants of the TPU-hybrid build."""
+the RMQ vs iterative refit variants, and (ISSUE 7) the fused-Pallas build
+pipeline vs the reference build — conformance-checked node-for-node.
+
+``--smoke`` runs a seconds-scale fixed-seed subset (wired into
+``scripts/tier1.sh``): one engine comparison with the bit-identity check.
+"""
+import sys
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -23,7 +31,39 @@ def _sah_proxy(tree, n):
     return float(sa.mean())
 
 
-def main():
+def _trees_identical(a, b) -> bool:
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def _engine_rows(kind, n, out):
+    """Fused kernel build vs reference build at one shape, plus the
+    node-for-node identity check (the tentpole's exactness contract)."""
+    pts = point_cloud(kind, n, seed=1)
+    boxes = G.Boxes(jnp.asarray(pts), jnp.asarray(pts))
+    t_ref = timeit(lambda: build(boxes, engine="ref"))
+    t_pal = timeit(lambda: build(boxes, engine="pallas"))
+    same = _trees_identical(build(boxes, engine="ref"),
+                            build(boxes, engine="pallas"))
+    row(f"construction/{kind}/n{n}/engine_ref", t_ref,
+        "reference sort+Karras+reduce pipeline")
+    row(f"construction/{kind}/n{n}/engine_pallas", t_pal,
+        f"fused kernels speedup={t_ref / t_pal:.2f}x identical={same}")
+    out[f"{kind}_n{n}"] = {
+        "ref_us": round(t_ref, 1), "pallas_us": round(t_pal, 1),
+        "speedup": round(t_ref / t_pal, 3), "identical": bool(same)}
+
+
+def main(smoke: bool = False):
+    engines = {}
+    if smoke:
+        _engine_rows("uniform", 4096, engines)
+        if not engines["uniform_n4096"]["identical"]:
+            raise AssertionError(
+                "fused pallas build diverged from reference build")
+        return {"engine": engines}
+
     for kind in ("uniform", "clusters"):
         for n in (4096, 32768):
             pts = point_cloud(kind, n, seed=1)
@@ -40,6 +80,11 @@ def main():
             row(f"construction/{kind}/n{n}/refit_iter", t_it,
                 "atomic-free level-sync refit")
 
+    for kind, n in (("uniform", 32768), ("clusters", 32768),
+                    ("uniform", 100000)):
+        _engine_rows(kind, n, engines)
+    return {"engine": engines}
+
 
 if __name__ == "__main__":
-    main()
+    main(smoke="--smoke" in sys.argv[1:])

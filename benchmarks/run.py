@@ -13,6 +13,8 @@ import os
 import sys
 import traceback
 
+from repro.core.route_table import hardware_fingerprint
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 MODULES = [
@@ -67,6 +69,10 @@ def main():
                     data = {k: v for k, v in old.items()
                             if k in PRESERVE.get(suffix, ())}
                     data.update(out)
+                # every persisted payload records WHERE it was measured —
+                # latencies without a hardware fingerprint are
+                # unattributable (previously only implied by the checkout)
+                data["fingerprint"] = hardware_fingerprint()
                 with open(path, "w") as f:
                     json.dump(data, f, indent=2, sort_keys=True)
                 print(f"# wrote {os.path.basename(path)}", file=sys.stderr)

@@ -24,3 +24,12 @@ python -m pytest -q -p no:cacheprovider \
 # deadline scheduler + background maintenance swap on every tier-1 run.
 # Prints metrics only — run.py owns persisting them to BENCH_service.json.
 python -m benchmarks.bench_pipeline --smoke
+
+# construction smoke (ISSUE 7): fused Pallas build vs reference build at a
+# fixed seed — raises if the trees are not bit-identical node-for-node.
+python -m benchmarks.bench_construction --smoke
+
+# route-table schema validation: a corrupt/stale persisted
+# ROUTE_TABLE.json fails loudly here instead of silently mis-routing
+# (absent table or foreign-hardware fingerprint is fine).
+python -m benchmarks.autotune --validate

@@ -45,7 +45,8 @@ def _is_legacy_space(arg):
 class BVH(Index):
     def __init__(self, values, indexable_getter=default_indexable_getter,
                  *_legacy, policy: ExecutionPolicy | None = None, engine=None,
-                 bits: int = 64, refit: str = "rmq"):
+                 bits: int = 64, refit: str = "rmq",
+                 build_engine: str | None = None):
         if _is_legacy_space(values):
             _warn_deprecated(
                 "BVH.__init__", "BVH(space, values, ...) is deprecated; "
@@ -58,8 +59,11 @@ class BVH(Index):
             raise TypeError("BVH() takes at most 2 positional arguments "
                             "(values, indexable_getter)")
         self._init_common(values, indexable_getter, policy, engine)
+        if build_engine is not None:
+            self.policy = self.policy.override(build_engine=build_engine)
         if self._n >= 2:
-            self.tree = lbvh.build(self._boxes, bits=bits, refit=refit)
+            self.tree = lbvh.build(self._boxes, bits=bits, refit=refit,
+                                   engine=self.policy.build_engine or "auto")
             if self.policy.device is not None:
                 self.tree = jax.device_put(self.tree, self.policy.device)
         else:
@@ -131,9 +135,18 @@ class BVH(Index):
 
     # --- backend SPI ------------------------------------------------------
     def _query_callback_impl(self, predicates, callback, state0, pol):
+        """Callback flavor, engine-dispatched: the fused kernel runs the
+        callback inside the traversal epilogue (results compressed in
+        VMEM, CSR never materialized); the while loop is the general
+        fallback. Per-query final states are bit-identical either way."""
         if self.tree is None:
             return _degenerate_callback(self.values, self._boxes, self._n,
                                         predicates, callback, state0)
+        engine = pol.resolve_engine()
+        if engine.route_callback(self, predicates, state0,
+                                 policy=pol) == E.ROUTE_PALLAS:
+            return engine.pallas_callback(self, predicates, callback, state0,
+                                          policy=pol)
         return T.traverse(self.tree, self.values, predicates, callback, state0)
 
     def _count_impl(self, predicates, pol):

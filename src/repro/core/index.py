@@ -109,12 +109,36 @@ class ExecutionPolicy:
                    states (default None -> elementwise psum, correct for
                    zero-initialized arithmetic states). Ignored by
                    single-process backends.
+    route_table:   a :class:`~repro.core.route_table.RouteTable` (or a
+                   path to a persisted one — loaded and validated here)
+                   overriding the engine's crossover thresholds for this
+                   index / call. None -> engine-config table, then the
+                   ambient persisted ``ROUTE_TABLE.json``, then defaults.
+                   A table only ever changes WHICH path serves a query,
+                   never the result.
+    build_engine:  LBVH construction path: "pallas" (fused build kernels)
+                   | "ref" (reference jit pipeline) | "auto"/None (the
+                   persisted table's choice, default pallas — both are
+                   bit-identical). ``REPRO_ENGINE_FORCE`` still beats
+                   this, for A/B debugging.
     """
     engine: Any = None
     device: Any = None
     capacity: int | None = None
     max_doublings: int = 6
     combine: Any = None
+    route_table: Any = None
+    build_engine: str | None = None
+
+    def __post_init__(self):
+        if isinstance(self.route_table, str):
+            from .route_table import RouteTable
+            object.__setattr__(self, "route_table",
+                               RouteTable.load(self.route_table))
+        if self.build_engine is not None and \
+                self.build_engine not in ("auto", "pallas", "ref"):
+            raise ValueError(f"build_engine={self.build_engine!r} is not "
+                             "one of ('auto', 'pallas', 'ref')")
 
     def resolve_engine(self):
         if self.engine is not None:

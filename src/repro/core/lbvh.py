@@ -25,6 +25,7 @@ Node numbering: internal 0..N-2 (root = 0), leaves N-1..2N-2
 from __future__ import annotations
 
 import dataclasses
+import os
 from functools import partial
 
 import jax
@@ -34,6 +35,8 @@ from . import morton as M
 from .geometry import Boxes
 
 __all__ = ["LBVH", "build", "refit", "sah_cost"]
+
+BUILD_ENGINES = ("auto", "pallas", "ref")
 
 SENTINEL = jnp.int32(-1)
 
@@ -184,13 +187,47 @@ def _refit_iterative(leaf_lo, leaf_hi, left_child, right_child):
     return node_lo[:ni], node_hi[:ni]
 
 
-@partial(jax.jit, static_argnames=("bits", "refit"))
-def build(boxes: Boxes, *, bits: int = 64, refit: str = "rmq") -> LBVH:
+def _resolve_build_engine(engine: str) -> str:
+    """Resolve the build-engine selector to "pallas" (fused kernels, the
+    ISSUE 7 fast path) or "ref" (the original unfused searches).
+
+    Order (DESIGN.md §8): REPRO_ENGINE_FORCE > explicit engine arg >
+    persisted RouteTable ``build_engine`` > default ("pallas" — the fused
+    path is exact, so it is safe to prefer everywhere).
+    """
+    if engine not in BUILD_ENGINES:
+        raise ValueError(f"engine={engine!r} is not one of {BUILD_ENGINES}")
+    env = os.environ.get("REPRO_ENGINE_FORCE")
+    if env == "pallas":        # debugging override beats everything
+        return "pallas"
+    if env == "loop":          # "loop" is the engine's name for unfused
+        return "ref"
+    if engine != "auto":
+        return engine
+    from .route_table import default_route_table
+    table = default_route_table()
+    if table is not None and table.build_engine != "auto":
+        return table.build_engine
+    return "pallas"
+
+
+def build(boxes: Boxes, *, bits: int = 64, refit: str = "rmq",
+          engine: str = "auto") -> LBVH:
     """Build an LBVH over N >= 2 leaf boxes.
 
     bits: 32 or 64 (Morton code width, §2.6 — 64 is the 2.0 default).
     refit: "rmq" (sparse table) or "iterative" (readiness fixpoint).
+    engine: "pallas" (fused delta-RMQ build, ``kernels.lbvh_build``),
+        "ref" (the original Karras searches), or "auto" (resolve via the
+        route table; see :func:`_resolve_build_engine`). Both engines
+        produce bit-identical trees — topology AND bounds.
     """
+    return _build_impl(boxes, bits=bits, refit=refit,
+                       engine=_resolve_build_engine(engine))
+
+
+@partial(jax.jit, static_argnames=("bits", "refit", "engine"))
+def _build_impl(boxes: Boxes, *, bits: int, refit: str, engine: str) -> LBVH:
     leaf_lo_u, leaf_hi_u = boxes.lo, boxes.hi
     n, dim = leaf_lo_u.shape
     if n < 2:
@@ -210,17 +247,24 @@ def build(boxes: Boxes, *, bits: int = 64, refit: str = "rmq") -> LBVH:
     leaf_lo = leaf_lo_u[perm]
     leaf_hi = leaf_hi_u[perm]
 
-    first, last, gamma = _karras_ranges(hi, lo, idx, n, max_log2)
+    if engine == "pallas":
+        from ..kernels import lbvh_build as K
+        first, last, gamma = K.karras_ranges(hi, lo, idx, n, max_log2)
+    else:
+        first, last, gamma = _karras_ranges(hi, lo, idx, n, max_log2)
 
     # Apetrei-style O(1) linking from ranges+split: child at gamma / gamma+1
     # is a leaf exactly when it coincides with the range end.
     left_child = jnp.where(gamma == first, (n - 1) + gamma, gamma).astype(jnp.int32)
     right_child = jnp.where(gamma + 1 == last, (n - 1) + gamma + 1, gamma + 1).astype(jnp.int32)
 
-    if refit == "rmq":
-        int_lo, int_hi = _refit_rmq(leaf_lo, leaf_hi, first, last, max_log2)
-    else:
+    if refit != "rmq":
         int_lo, int_hi = _refit_iterative(leaf_lo, leaf_hi, left_child, right_child)
+    elif engine == "pallas":
+        from ..kernels import lbvh_build as K
+        int_lo, int_hi = K.aabb_rmq(leaf_lo, leaf_hi, first, last, max_log2)
+    else:
+        int_lo, int_hi = _refit_rmq(leaf_lo, leaf_hi, first, last, max_log2)
     node_lo = jnp.concatenate([int_lo, leaf_lo], 0)
     node_hi = jnp.concatenate([int_hi, leaf_hi], 0)
 

@@ -1,0 +1,250 @@
+"""Pallas kernel: callback execution fused into the traversal epilogue
+(ISSUE 7 tentpole; ArborX 2.0 §2.2).
+
+The 2.0 callback design exists so results are compressed *inside*
+traversal instead of materialized as CSR — but until this PR the
+``Index.query(callback=)`` flavor always ran on the vmapped while-loop
+path: the fused kernels only knew the two hardcoded epilogues (count /
+collect-first-capacity). This kernel closes that gap generically: the
+user callback runs INSIDE the kernel loop, against the same block-of-
+queries / whole-tree-in-VMEM layout as ``bvh_traverse.py``, with the
+callback's state pytree carried per lane and written out blocked.
+
+It is the exact kernel spelling of ``core.traversal._traverse_one``:
+
+  * same node sequence (root, descend-left / rope escape),
+  * same pruning (``node_overlap_test`` + the pair-traversal
+    ``range_last > min_pos`` filter),
+  * same leaf handling (generic ``_leaf_test`` — fine spatial test or
+    ray hit with parameter t),
+  * same masked-callback contract (applied unconditionally, result
+    selected by the hit mask; ``done`` retires the lane — ArborX
+    CallbackTreeTraversalControl).
+
+so the per-query final states are bit-identical to the loop path (the
+conformance tests pin this). Because ``Index._collect_with_t`` funnels
+through the callback SPI, routing it here also gives the fused
+*ray-ordered* traversal: hits are collected in-kernel (never CSR), then
+the §2.5 segment sort runs outside.
+
+Predicate / state / value pytrees are handled generically: predicate and
+state leaves are blocked by query rows, value leaves are staged whole.
+Anything expressible on the loop path is expressible here; the engine's
+``route_callback`` only gates on sizes (VMEM) and predicate kind. Boolean
+state leaves cross the kernel boundary as int32 (TPU refs) and are cast
+back inside/outside.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ._compat import compiler_params
+from .ops import _round_up
+
+__all__ = ["bvh_traverse_callback"]
+
+
+def _io_dtype(dt):
+    return jnp.int32 if dt == jnp.bool_ else dt
+
+
+def _take(arr, idx):
+    return jnp.take(arr, idx, axis=0, mode="clip")
+
+
+def _callback_kernel(*refs, callback, pred_def, state_def, val_def,
+                     state_dtypes, const_dtypes, const_shapes,
+                     n_pred: int, n_state: int, n_consts: int, n: int):
+    # core imported at trace time: this module must not pull the core
+    # package in at import time (engine -> kernels -> core would cycle)
+    from ..core import predicates as P
+    from ..core import traversal as T
+
+    k = 0
+    pred_leaves = [refs[k + i][...] for i in range(n_pred)]; k += n_pred
+    state_leaves = [refs[k + i][...] for i in range(n_state)]; k += n_state
+    minpos = refs[k][...]; k += 1
+    node_lo = refs[k][...].astype(jnp.float32); k += 1
+    node_hi = refs[k][...].astype(jnp.float32); k += 1
+    rope = refs[k][...]; k += 1
+    left = refs[k][...]; k += 1
+    rlast = refs[k][...]; k += 1
+    perm = refs[k][...]; k += 1
+    val_leaves = [r[...] for r in
+                  refs[k:len(refs) - n_state - n_consts]]
+    # arrays the user callback closed over, hoisted by closure_convert
+    # and staged whole (pallas kernels cannot capture array constants)
+    consts = [jnp.reshape(r[...].astype(dt), shp) for r, dt, shp in
+              zip(refs[len(refs) - n_state - n_consts:len(refs) - n_state],
+                  const_dtypes, const_shapes)]
+    out_refs = refs[len(refs) - n_state:]
+
+    preds = jax.tree_util.tree_unflatten(pred_def, pred_leaves)
+    values = jax.tree_util.tree_unflatten(val_def, val_leaves)
+    state0 = jax.tree_util.tree_unflatten(
+        state_def, [leaf.astype(dt) for leaf, dt in
+                    zip(state_leaves, state_dtypes)])
+    bq = state_leaves[0].shape[0] if n_state else pred_leaves[0].shape[0]
+
+    def overlap_one(p, lo, hi):
+        return P.node_overlap_test(p, lo[None], hi[None])[0]
+
+    def select(mask, new, old):
+        def sel(a, b):
+            m = mask.reshape((bq,) + (1,) * (a.ndim - 1))
+            return jnp.where(m, a, b)
+        return jax.tree_util.tree_map(sel, new, old)
+
+    def cond(carry):
+        node, done, _ = carry
+        return jnp.any((node != -1) & ~done)
+
+    def body(carry):
+        node, done, st = carry
+        active = (node != -1) & ~done
+        nd = jnp.where(active, node, 0)          # root is internal (n >= 2)
+
+        lo = _take(node_lo, nd)
+        hi = _take(node_hi, nd)
+        overlap = jax.vmap(overlap_one)(preds, lo, hi)
+        pos_ok = _take(rlast, nd) > minpos
+        is_leaf = nd >= n - 1
+        leaf_pos = jnp.clip(nd - (n - 1), 0, n - 1)
+        orig = _take(perm, leaf_pos)
+        leaf_val = jax.tree_util.tree_map(lambda a: _take(a, orig), values)
+        fine, t = jax.vmap(T._leaf_test)(preds, leaf_val)
+        hit = active & is_leaf & overlap & fine & (leaf_pos > minpos)
+
+        cb = lambda s_, p_, v_, i_, t_: callback(s_, p_, v_, i_, t_, *consts)
+        new_st, cb_done = jax.vmap(cb)(st, preds, leaf_val, orig, t)
+        st = select(hit, new_st, st)
+        done = done | (hit & cb_done)
+
+        descend = active & overlap & pos_ok & ~is_leaf
+        nxt = jnp.where(descend, _take(left, jnp.minimum(nd, n - 2)),
+                        _take(rope, nd))
+        return jnp.where(active, nxt, -1), done, st
+
+    node0 = jnp.zeros((bq,), jnp.int32)
+    done0 = jnp.zeros((bq,), jnp.bool_)
+    _, _, st = jax.lax.while_loop(cond, body, (node0, done0, state0))
+    final = jax.tree_util.tree_leaves(st)
+    for ref, leaf in zip(out_refs, final):
+        ref[...] = leaf.astype(ref.dtype)
+
+
+def _block_spec(shape, bq):
+    """Row-blocked spec for a (Q, ...) leaf."""
+    rest = shape[1:]
+    return pl.BlockSpec((bq,) + rest,
+                        lambda i, _r=len(rest): (i,) + (0,) * _r)
+
+
+def _whole_spec(shape):
+    return pl.BlockSpec(shape, lambda i, _r=len(shape): (0,) * _r)
+
+
+def _pad_q(a, qp):
+    q = a.shape[0]
+    if q == qp:
+        return a
+    pad = jnp.zeros((qp - q,) + a.shape[1:], a.dtype)
+    return jnp.concatenate([a, pad], axis=0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("callback", "bq", "interpret"))
+def bvh_traverse_callback(node_lo, node_hi, rope, left_child, range_last,
+                          leaf_perm, values, predicates, callback, state0,
+                          *, min_pos=None, bq: int = 256,
+                          interpret: bool | None = None):
+    """Fused traversal with an arbitrary user callback.
+
+    values/predicates/state0 are pytrees (state0 batched (Q, ...) — the
+    ``Index._query_callback_impl`` contract). Returns the per-query final
+    states, bit-identical to ``core.traversal.traverse``.
+
+    Padded query lanes get ``min_pos = n``: the position filter then
+    fails at the root (``range_last[0] = n-1``), so they escape to the
+    rope sentinel on the first step and can never record a hit —
+    predicate contents need no special padding values.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = leaf_perm.shape[0]
+    pred_leaves, pred_def = jax.tree_util.tree_flatten(predicates)
+    state_leaves, state_def = jax.tree_util.tree_flatten(state0)
+    val_leaves, val_def = jax.tree_util.tree_flatten(values)
+    q = pred_leaves[0].shape[0]
+    if q == 0:
+        return state0
+
+    bq_eff = min(bq, _round_up(q, 8))
+    qp = _round_up(q, bq_eff)
+
+    # Hoist arrays the callback closed over into explicit operands: a
+    # pallas kernel cannot capture array constants, and loop-path parity
+    # demands closures keep working (e.g. dbscan's label arrays).
+    # jax.closure_convert hoists only inexact (differentiable) consts, so
+    # trace to a jaxpr ourselves and lift ALL array consts.
+    one = lambda tree: jax.tree_util.tree_map(lambda a: a[0], tree)
+    def _cb(st_, pr_, vl_, ix_, tt_):
+        return callback(st_, pr_, vl_, ix_, tt_)
+    example = (one(state0), one(predicates), one(values),
+               jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32))
+    cb_jaxpr = jax.make_jaxpr(_cb)(*example)
+    cb_out_tree = jax.tree_util.tree_structure(jax.eval_shape(_cb, *example))
+    consts = [jnp.asarray(c) for c in cb_jaxpr.consts]
+
+    def closed_cb(st_, pr_, vl_, ix_, tt_, *consts_):
+        flat, _ = jax.tree_util.tree_flatten((st_, pr_, vl_, ix_, tt_))
+        out = jax.core.eval_jaxpr(cb_jaxpr.jaxpr, list(consts_), *flat)
+        return jax.tree_util.tree_unflatten(cb_out_tree, out)
+    const_dtypes = tuple(c.dtype for c in consts)
+    const_shapes = tuple(jnp.shape(c) for c in consts)
+    # 0-d constants ride as (1,) rows (pallas refs want >= 1 dim)
+    consts_io = [jnp.reshape(jnp.asarray(c).astype(_io_dtype(c.dtype)),
+                             jnp.shape(c) or (1,)) for c in consts]
+
+    state_dtypes = tuple(leaf.dtype for leaf in state_leaves)
+    pred_p = [_pad_q(leaf, qp) for leaf in pred_leaves]
+    state_p = [_pad_q(leaf, qp).astype(_io_dtype(leaf.dtype))
+               for leaf in state_leaves]
+    mp = jnp.full((q,), -1, jnp.int32) if min_pos is None else \
+        min_pos.astype(jnp.int32)
+    mp_p = jnp.concatenate([mp, jnp.full((qp - q,), n, jnp.int32)])
+
+    tree_arrs = [node_lo, node_hi, rope, left_child, range_last, leaf_perm]
+    ins = pred_p + state_p + [mp_p] + tree_arrs + val_leaves + consts_io
+    in_specs = ([_block_spec(a.shape, bq_eff) for a in pred_p]
+                + [_block_spec(a.shape, bq_eff) for a in state_p]
+                + [_block_spec(mp_p.shape, bq_eff)]
+                + [_whole_spec(a.shape) for a in tree_arrs]
+                + [_whole_spec(a.shape) for a in val_leaves]
+                + [_whole_spec(a.shape) for a in consts_io])
+    out_specs = [_block_spec(a.shape, bq_eff) for a in state_p]
+    out_shape = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in state_p]
+
+    kernel = functools.partial(
+        _callback_kernel, callback=closed_cb, pred_def=pred_def,
+        state_def=state_def, val_def=val_def, state_dtypes=state_dtypes,
+        const_dtypes=const_dtypes, const_shapes=const_shapes,
+        n_pred=len(pred_p), n_state=len(state_p),
+        n_consts=len(consts_io), n=n)
+    outs = pl.pallas_call(
+        kernel,
+        grid=(qp // bq_eff,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        compiler_params=compiler_params(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(*ins)
+    if not isinstance(outs, (list, tuple)):
+        outs = [outs]
+    final = [o[:q].astype(dt) for o, dt in zip(outs, state_dtypes)]
+    return jax.tree_util.tree_unflatten(state_def, final)

@@ -52,8 +52,12 @@ class IndexStore:
     """Thread-safe name -> IndexVersion registry with refit-aware updates."""
 
     def __init__(self, engine: E.QueryEngine | None = None, *,
-                 rebuild_threshold: float = 1.5, keep_versions: int = 3):
+                 rebuild_threshold: float = 1.5, keep_versions: int = 3,
+                 build_engine: str | None = None):
         self.engine = engine if engine is not None else E.QueryEngine()
+        # "pallas" | "ref" | "auto"/None; flows into every (re)build via
+        # ExecutionPolicy.build_engine (REPRO_ENGINE_FORCE still wins)
+        self.build_engine = build_engine
         self.rebuild_threshold = float(rebuild_threshold)
         self.keep_versions = int(keep_versions)
         self._lock = threading.Lock()
@@ -133,7 +137,8 @@ class IndexStore:
 
     # -- internals ---------------------------------------------------------
     def _publish(self, name, values, getter, *, action) -> IndexVersion:
-        bvh = BVH(values, getter, policy=ExecutionPolicy(engine=self.engine))
+        bvh = BVH(values, getter, policy=ExecutionPolicy(
+            engine=self.engine, build_engine=self.build_engine))
         sah = float(lbvh.sah_cost(bvh.tree)) if bvh.tree is not None else 0.0
         return self._swap(IndexVersion(
             name=name, version=0, bvh=bvh, action=action, sah=sah,

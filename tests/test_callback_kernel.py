@@ -1,0 +1,138 @@
+"""Fused callback-kernel conformance (ISSUE 7 tentpole): per-query final
+states from ``kernels.bvh_callback.bvh_traverse_callback`` must be
+bit-identical to the while-loop ``traversal.traverse`` for every callback
+shape the loop path supports — standard factories, early exit, pytree
+states, and callbacks that close over arrays (the dbscan pattern)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import callbacks as CB
+from repro.core import geometry as G
+from repro.core import predicates as P
+from repro.core import traversal as T
+from repro.core.bvh import BVH
+from repro.core.index import ExecutionPolicy, _bcast_state
+from repro.core.lbvh import build
+from repro.core.route_table import RouteTable
+from repro.kernels.bvh_callback import bvh_traverse_callback
+
+
+def _pts(n, dim=3, seed=0):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.uniform(0, 1, (n, dim)).astype(np.float32))
+
+
+def _run_both(tree, values, preds, cb, s0, bq=64):
+    s0b = _bcast_state(s0, len(preds))
+    want = T.traverse(tree, values, preds, cb, s0b)
+    got = bvh_traverse_callback(tree.node_lo, tree.node_hi, tree.rope,
+                                tree.left_child, tree.range_last,
+                                tree.leaf_perm, values, preds, cb, s0b,
+                                bq=bq)
+    import jax
+    for w, g in zip(jax.tree_util.tree_leaves(want),
+                    jax.tree_util.tree_leaves(got)):
+        assert w.dtype == g.dtype
+        assert np.array_equal(np.asarray(w), np.asarray(g))
+    return got
+
+
+def _scene(n=300, q=37, r=0.25, seed=1):
+    pts = _pts(n, 3, seed=seed)
+    tree = build(G.Boxes(pts, pts))
+    preds = P.intersects(G.Spheres(_pts(q, 3, seed=seed + 50),
+                                   jnp.full((q,), r, jnp.float32)))
+    return tree, G.Points(pts), preds
+
+
+@pytest.mark.parametrize("factory", [
+    CB.counting,
+    lambda: CB.count_with_limit(3),          # early exit retires lanes
+    CB.min_distance,
+    lambda: CB.collect_first_k(5),
+    lambda: CB.collect_hits(16),             # tuple state w/ (cap,) rows
+])
+def test_standard_callbacks_bit_identical(factory):
+    tree, values, preds = _scene()
+    cb, s0 = factory()
+    _run_both(tree, values, preds, cb, s0)
+
+
+def test_sum_payload_and_attached_data():
+    tree, values, preds = _scene()
+    preds = P.attach_data(preds, jnp.arange(len(preds), dtype=jnp.float32))
+    cb = CB.sum_payload(lambda pred, value: pred.data + value.coords[0])
+    _run_both(tree, values, preds, cb, jnp.float32(0))
+
+
+def test_closure_capturing_callback():
+    """Callbacks closing over int/bool arrays (dbscan's is_core/labels) —
+    the kernel must hoist the captured constants as operands."""
+    tree, values, preds = _scene(n=200, q=29)
+    flags = jnp.asarray(np.random.default_rng(3).random(200) < 0.5)
+    weights = jnp.arange(200, dtype=jnp.int32)
+    big = jnp.int32(10**6)
+
+    def cb(state, pred, value, index, t):
+        w = jnp.where(flags[index], weights[index], big)
+        return jnp.minimum(state, w), jnp.bool_(False)
+
+    _run_both(tree, values, preds, cb, big)
+
+
+def test_bool_state_crosses_kernel_boundary():
+    tree, values, preds = _scene(n=150, q=17)
+
+    def cb(state, pred, value, index, t):
+        return (state[0] | (index % 2 == 0), state[1] + 1), jnp.bool_(False)
+
+    got = _run_both(tree, values, preds, cb,
+                    (jnp.bool_(False), jnp.int32(0)))
+    assert got[0].dtype == jnp.bool_
+
+
+@pytest.mark.parametrize("kind", ["intersect", "ordered", "nearest"])
+def test_ray_predicates_bit_identical(kind):
+    r0 = np.random.default_rng(5)
+    pts = _pts(256, 3, seed=6)
+    tree = build(G.Boxes(pts, pts + 0.05))
+    values = G.Boxes(pts, pts + 0.05)
+    o = jnp.asarray(r0.uniform(0, 1, (21, 3)).astype(np.float32))
+    d = jnp.asarray(r0.normal(size=(21, 3)).astype(np.float32))
+    rays = G.Rays(o, d)
+    preds = {"intersect": P.RayIntersect(rays),
+             "ordered": P.RayOrderedIntersect(rays),
+             "nearest": P.RayNearest(rays, 1)}[kind]
+    cb, s0 = CB.min_distance()
+    _run_both(tree, values, preds, cb, s0)
+
+
+def test_block_size_does_not_change_results():
+    tree, values, preds = _scene(n=500, q=100)
+    cb, s0 = CB.counting()
+    outs = [np.asarray(_run_both(tree, values, preds, cb, s0, bq=bq))
+            for bq in (8, 64, 256)]
+    assert np.array_equal(outs[0], outs[1])
+    assert np.array_equal(outs[1], outs[2])
+
+
+def test_query_callback_routes_through_kernel_end_to_end():
+    """Index.query(callback=) with a permissive table must route pallas
+    and agree with the forced-loop result."""
+    pts = _pts(600, 3, seed=12)
+    vals = G.Points(pts)
+    preds = P.intersects(G.Spheres(_pts(64, 3, seed=13),
+                                   jnp.full((64,), 0.2, jnp.float32)))
+    cb, s0 = CB.counting()
+    pol_pl = ExecutionPolicy(route_table=RouteTable.single(
+        pallas_min_queries=1, pallas_min_leaves=1, pallas_max_nodes=1 << 30))
+    pol_lp = ExecutionPolicy(route_table=RouteTable.single(
+        bf_max_work=0, pallas_min_queries=1 << 30))
+    bvh = BVH(vals)
+    eng = pol_pl.resolve_engine()
+    assert eng.route_callback(bvh, preds, _bcast_state(s0, 64),
+                              policy=pol_pl) == "pallas"
+    a = np.asarray(bvh.query(preds, callback=(cb, s0), policy=pol_pl))
+    b = np.asarray(bvh.query(preds, callback=(cb, s0), policy=pol_lp))
+    assert np.array_equal(a, b)

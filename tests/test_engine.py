@@ -9,6 +9,7 @@ from repro.core.brute_force import BruteForce
 from repro.core.bvh import BVH
 from repro.core.engine import (ROUTE_BRUTEFORCE, ROUTE_LOOP, ROUTE_PALLAS,
                                EngineConfig, QueryEngine)
+from repro.core.route_table import RouteTable
 from repro.core.lbvh import build
 from repro.core.traversal import traverse
 from repro.core import callbacks as CB
@@ -164,15 +165,16 @@ def _mk(n=600, engine=None):
 
 
 def test_route_small_work_goes_bruteforce():
-    eng = QueryEngine(EngineConfig(brute_force_max_work=1 << 22))
+    eng = QueryEngine(EngineConfig(
+        route_table=RouteTable.single(bf_max_work=1 << 22)))
     bvh = _mk(600, eng)
     preds = P.intersects(G.Spheres(_pts(10, 3, seed=1), jnp.full((10,), 0.1)))
     assert eng.route_spatial(bvh, preds) == ROUTE_BRUTEFORCE
 
 
 def test_route_large_batch_goes_pallas():
-    eng = QueryEngine(EngineConfig(brute_force_max_work=100,
-                                   pallas_min_queries=8, pallas_min_leaves=8))
+    eng = QueryEngine(EngineConfig(route_table=RouteTable.single(
+        bf_max_work=100, pallas_min_queries=8, pallas_min_leaves=8)))
     bvh = _mk(600, eng)
     preds = P.intersects(G.Spheres(_pts(64, 3, seed=1), jnp.full((64,), 0.1)))
     assert eng.route_spatial(bvh, preds) == ROUTE_PALLAS
@@ -185,15 +187,16 @@ def test_route_ineligible_values_fall_back_to_loop():
     r = np.random.default_rng(2)
     a = jnp.asarray(r.uniform(0, 1, (64, 3)).astype(np.float32))
     tris = G.Triangles(a, a + 0.05, a + 0.1)
-    eng = QueryEngine(EngineConfig(brute_force_max_work=0,
-                                   pallas_min_queries=1, pallas_min_leaves=1))
+    eng = QueryEngine(EngineConfig(route_table=RouteTable.single(
+        bf_max_work=0, pallas_min_queries=1, pallas_min_leaves=1)))
     bvh = BVH(tris, engine=eng)
     preds = P.intersects(G.Spheres(_pts(32, 3, seed=3), jnp.full((32,), 0.2)))
     assert eng.route_spatial(bvh, preds) == ROUTE_LOOP
 
 
 def test_route_ray_predicates_always_loop():
-    eng = QueryEngine(EngineConfig(brute_force_max_work=1 << 30))
+    eng = QueryEngine(EngineConfig(
+        route_table=RouteTable.single(bf_max_work=1 << 30)))
     bvh = _mk(600, eng)
     rays = P.RayNearest(G.Rays(_pts(8, 3, seed=4), _pts(8, 3, seed=5)), 1)
     assert eng.route_spatial(bvh, rays) == ROUTE_LOOP

@@ -204,8 +204,10 @@ def test_exec_paths_agree_across_forced_routes():
     q = _pts(24, 18)
     results = {}
     for force in (ROUTE_LOOP, ROUTE_BRUTEFORCE, ROUTE_PALLAS):
-        eng = QueryEngine(EngineConfig(
-            force=force, pallas_min_queries=1, pallas_min_leaves=1))
+        from repro.core.route_table import RouteTable
+        eng = QueryEngine(EngineConfig(force=force, route_table=RouteTable.
+                                       single(pallas_min_queries=1,
+                                              pallas_min_leaves=1)))
         srv = QueryServer(engine=eng, config=ServiceConfig(capacity=32))
         srv.create_index("default", G.Points(jnp.asarray(pts)))
         r = srv.handle([within_request(q, 0.2)])[0]

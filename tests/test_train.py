@@ -130,18 +130,23 @@ def test_pipeline_resume_exactness():
 
 # --- straggler monitor --------------------------------------------------------
 
-def test_straggler_monitor_detects_slow_steps():
-    import time
+def test_straggler_monitor_detects_slow_steps(monkeypatch):
+    # scripted clock: real sleep()s made this flake under suite-wide load
+    # (scheduler jitter on a 1ms sleep easily exceeds the 2x threshold)
+    from repro.train import straggler as S
+    now = [0.0]
+    monkeypatch.setattr(S.time, "perf_counter", lambda: now[0])
+
     mon = StragglerMonitor(window=20, threshold=2.0, sustained=3)
+
+    def step(i, dt):
+        mon.start()
+        now[0] += dt
+        return mon.stop(i)
+
     for i in range(15):
-        mon.start()
-        time.sleep(0.001)
-        assert mon.stop(i) is None
-    actions = []
-    for i in range(15, 19):
-        mon.start()
-        time.sleep(0.02)
-        actions.append(mon.stop(i))
+        assert step(i, 0.001) is None
+    actions = [step(i, 0.02) for i in range(15, 19)]
     assert "warn" in actions or "checkpoint" in actions \
         or "rebalance" in actions
     assert mon.summary()["events"] >= 1
