@@ -14,6 +14,16 @@ else
 fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# reprolint (DESIGN.md §9): lock discipline + tracer hygiene + the
+# launch-capture kernel sanitizer. A hard gate — exit 1 on any live
+# finding, exit 2 if the analyzer itself breaks; both fail tier-1.
+python -m repro.analysis --strict
+
+# runtime kernel contracts: interpret-mode re-execution of all four
+# Pallas kernel modules with REPRO_SANITIZE assertions armed, vs
+# oracles (seconds-scale, N=2000, fixed seed).
+python -m repro.analysis --sanitize-smoke
 # DeprecationWarnings are errors: the legacy API-v1 spellings (space-first
 # query/count/knn, DistributedTree query_knn-style methods) are warn-once
 # shims, so any in-repo call site that sneaks back in fails tier-1 here.

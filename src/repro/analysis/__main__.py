@@ -1,0 +1,73 @@
+"""``python -m repro.analysis`` — the reprolint CLI (tier-1 gate).
+
+Exit codes (documented contract, wired into scripts/tier1.sh):
+
+  0  clean — no live findings (suppressed ones may print),
+  1  findings — at least one live finding, or a smoke assertion failed,
+  2  internal error — a pass crashed; the analyzer itself is broken.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="reprolint: lock discipline, JAX tracer hygiene, and "
+                    "Pallas kernel sanitizing for this repo")
+    ap.add_argument("paths", nargs="*",
+                    help="files/directories to lint (default: the repro "
+                         "package)")
+    ap.add_argument("--strict", action="store_true",
+                    help="also run the launch-capture kernel sanitizer "
+                         "(PLK001/PLK002; imports jax)")
+    ap.add_argument("--budget", type=int, default=None, metavar="BYTES",
+                    help="VMEM budget for PLK001 (default 16 MiB)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    ap.add_argument("--sanitize-smoke", action="store_true",
+                    help="run the REPRO_SANITIZE interpret-mode kernel "
+                         "smoke instead of the static passes")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        from .findings import RULES
+        for rule, desc in sorted(RULES.items()):
+            print(f"{rule}  {desc}")
+        return 0
+
+    if args.sanitize_smoke:
+        from . import smoke
+        try:
+            return smoke.run()
+        except AssertionError as err:
+            print(f"FAILED: {err}", file=sys.stderr)
+            return 1
+        except Exception:
+            traceback.print_exc()
+            return 2
+
+    from . import analyze
+    try:
+        findings = analyze(args.paths or None, strict=args.strict,
+                           budget=args.budget)
+    except Exception:
+        traceback.print_exc()
+        print("reprolint: internal error (exit 2)", file=sys.stderr)
+        return 2
+
+    live = [f for f in findings if not f.suppressed]
+    suppressed = [f for f in findings if f.suppressed]
+    for f in findings:
+        print(f.format())
+    mode = "strict" if args.strict else "default"
+    print(f"reprolint ({mode}): {len(live)} finding(s), "
+          f"{len(suppressed)} suppressed")
+    return 1 if live else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,96 @@
+"""PLK003: source-level bounds discipline inside pallas kernel bodies.
+
+Pallas on TPU does not bounds-check for you: an out-of-range gather or a
+``pl.ds`` window that runs past the ref reads garbage (interpret mode) or
+corrupts VMEM (compiled). The repo's convention — established in the PR 7
+kernels — is that every dynamic access is explicitly clamped:
+
+  * ``jnp.take(ref, idx, ...)`` must pass ``mode="clip"``,
+  * a ``pl.ds(start, size)`` / ``pl.dslice`` whose start is not a plain
+    constant must wrap the start in ``jnp.clip``/``minimum``/``maximum``.
+
+The pass runs on kernel bodies (as discovered by
+:func:`tracer.traced_functions`) plus same-module helpers they call, one
+level of transitive closure at a time until a fixpoint.
+"""
+from __future__ import annotations
+
+import ast
+
+from .astutil import SourceFile, call_name, module_level_names
+from .findings import Finding
+from .tracer import traced_functions
+
+__all__ = ["run"]
+
+_CLAMP_CALLS = {"clip", "minimum", "maximum", "min", "max", "mod",
+                "remainder", "where"}
+
+
+def _is_clamped(node: ast.AST) -> bool:
+    """True when the expression is a constant or visibly range-limited."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Call):
+        tail = call_name(node.func).rsplit(".", 1)[-1]
+        if tail in _CLAMP_CALLS:
+            return True
+    if isinstance(node, ast.BinOp):
+        # start = base * BLOCK etc. — clamped if either side is
+        return _is_clamped(node.left) or _is_clamped(node.right)
+    return False
+
+
+def _kernel_bodies(src: SourceFile) -> list:
+    """Kernel fns plus same-module functions they (transitively) call."""
+    mod = module_level_names(src.tree)
+    fns = {name: node for name, node in mod.items()
+           if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    work = [tf.node for tf in traced_functions(src) if tf.kind == "kernel"]
+    seen = {id(n): n for n in work}
+    while work:
+        fn = work.pop()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                callee = fns.get(call_name(node.func))
+                if callee is not None and id(callee) not in seen:
+                    seen[id(callee)] = callee
+                    work.append(callee)
+    return list(seen.values())
+
+
+def _check_body(src: SourceFile, fn) -> list:
+    findings = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node.func)
+        tail = name.rsplit(".", 1)[-1]
+        if tail == "take":
+            mode = next((kw.value for kw in node.keywords
+                         if kw.arg == "mode"), None)
+            if not (isinstance(mode, ast.Constant) and mode.value == "clip"):
+                findings.append(Finding(
+                    "PLK003", src.path, node.lineno,
+                    f"gather via {name!r} in kernel {fn.name!r} without "
+                    "mode='clip'",
+                    hint="pass mode='clip' so a bad index reads a clamped "
+                         "element instead of OOB memory"))
+        elif tail in ("ds", "dslice") and name.startswith("pl."):
+            start = node.args[0] if node.args else None
+            if start is not None and not _is_clamped(start):
+                findings.append(Finding(
+                    "PLK003", src.path, node.lineno,
+                    f"pl.{tail} in kernel {fn.name!r} with unclamped "
+                    "dynamic start",
+                    hint="wrap the start in jnp.clip(...)/jnp.minimum(...) "
+                         "against the ref extent"))
+    return findings
+
+
+def run(files: list) -> list:
+    findings: list = []
+    for src in files:
+        for fn in _kernel_bodies(src):
+            findings += _check_body(src, fn)
+    return findings

@@ -1,0 +1,383 @@
+"""JAX tracer-hygiene passes (TRC001-TRC004).
+
+"Traced functions" are discovered statically per module:
+
+  * functions decorated ``@jax.jit`` / ``@partial(jax.jit, ...)``,
+  * local functions wrapped ``jax.jit(f)``,
+  * pallas kernel bodies — the callable handed to ``pl.pallas_call``
+    (directly or through ``functools.partial``, whose bound keywords are
+    compile-time constants exactly like ``static_argnames``).
+
+TRC001 flags Python ``if``/``while``/``assert``/ternaries whose test
+directly references a non-static parameter of a traced function: under
+trace those parameters are tracers and the branch either crashes
+(ConcretizationTypeError) or silently bakes in one path. ``x is None``,
+``isinstance(x, ...)`` and ``x.shape/dtype/ndim/size`` uses are exempt —
+those are static facts about a tracer. (No dataflow: a tracer laundered
+through a local is out of scope; the runtime sanitizer covers that.)
+
+TRC002 flags pallas kernel bodies reading outer-scope names bound to
+array constructors (``jnp.array`` etc.) or to enclosing-function locals:
+pallas kernels cannot capture array constants — the bug class PR 7's
+const-lifting exists to fix. Scalars/imports/module functions are fine.
+
+TRC003 flags host syncs (``np.asarray``/``np.array``/``jax.device_get``/
+``.block_until_ready()``/``.item()``) made while holding a lock: a device
+sync under a serving lock stalls every client behind it.
+
+TRC004 flags the executable-cache discipline in engine-style code: for
+``self._cached(key, make)`` call sites, every name the jitted body closes
+over must appear in the ``key`` expression — a closed-over value missing
+from the key means two logically different executables share one cache
+slot (stale results) or retrace unexpectedly.
+"""
+from __future__ import annotations
+
+import ast
+
+from .astutil import (SourceFile, assigned_names, call_name,
+                      lock_attrs_of_class, module_level_names)
+from .findings import Finding
+
+__all__ = ["run", "traced_functions", "TracedFn"]
+
+#: callables that constitute an array constant at module scope
+_ARRAY_CTORS = {
+    "array", "asarray", "zeros", "ones", "full", "arange", "linspace",
+    "eye", "empty", "zeros_like", "ones_like", "full_like",
+}
+
+_HOST_SYNC_CALLS = {"np.asarray", "np.array", "numpy.asarray",
+                    "numpy.array", "jax.device_get"}
+_HOST_SYNC_METHODS = {"block_until_ready", "item"}
+
+_SHAPE_ATTRS = {"shape", "dtype", "ndim", "size"}
+
+
+class TracedFn:
+    def __init__(self, node, static: set, kind: str):
+        self.node = node          # FunctionDef
+        self.static = static      # param names that are compile-time static
+        self.kind = kind          # "jit" | "kernel"
+
+
+def _is_jax_jit(node) -> bool:
+    return call_name(node) in ("jax.jit", "jit")
+
+
+def _static_argnames(call: ast.Call) -> set:
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            v = kw.value
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return {e.value for e in v.elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, str)}
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                return {v.value}
+    return set()
+
+
+def _local_functions(scope) -> dict:
+    out = {}
+    for node in ast.walk(scope):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out[node.name] = node
+    return out
+
+
+def traced_functions(src: SourceFile) -> list:
+    """All statically discoverable traced functions in a module."""
+    fns = _local_functions(src.tree)
+    traced: dict = {}
+
+    # decorated defs
+    for fn in fns.values():
+        for dec in fn.decorator_list:
+            if _is_jax_jit(dec):
+                traced[id(fn)] = TracedFn(fn, set(), "jit")
+            elif isinstance(dec, ast.Call):
+                if _is_jax_jit(dec.func):
+                    traced[id(fn)] = TracedFn(fn, _static_argnames(dec), "jit")
+                elif call_name(dec.func) in ("functools.partial", "partial") \
+                        and dec.args and _is_jax_jit(dec.args[0]):
+                    traced[id(fn)] = TracedFn(fn, _static_argnames(dec), "jit")
+
+    # jax.jit(f) / pl.pallas_call(kernel_or_partial, ...) call sites; a
+    # name is resolved one step through `x = functools.partial(f, **kw)`
+    partials: dict = {}
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and isinstance(node.value, ast.Call) \
+                and call_name(node.value.func) in ("functools.partial",
+                                                   "partial"):
+            partials[node.targets[0].id] = node.value
+    for node in ast.walk(src.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node.func)
+        if _is_jax_jit(node.func) and node.args \
+                and isinstance(node.args[0], ast.Name):
+            fn = fns.get(node.args[0].id)
+            if fn is not None and id(fn) not in traced:
+                traced[id(fn)] = TracedFn(fn, _static_argnames(node), "jit")
+        elif name.endswith("pallas_call") and node.args:
+            target, static = node.args[0], set()
+            if isinstance(target, ast.Name) and target.id in partials:
+                target = partials[target.id]
+            if isinstance(target, ast.Call) and call_name(
+                    target.func) in ("functools.partial", "partial"):
+                static = {kw.arg for kw in target.keywords if kw.arg}
+                target = target.args[0] if target.args else None
+            if isinstance(target, ast.Name):
+                fn = fns.get(target.id)
+                if fn is not None:
+                    traced[id(fn)] = TracedFn(fn, static, "kernel")
+    return list(traced.values())
+
+
+# ---------------------------------------------------------------------------
+# TRC001: control flow on tracers
+# ---------------------------------------------------------------------------
+
+def _param_names(fn) -> set:
+    a = fn.args
+    names = {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+    names.discard("self")
+    return names
+
+
+def _tracer_refs(node, tracer_params: set) -> set:
+    """Names of tracer params referenced in `node`, EXCLUDING exempt
+    contexts (`is None` compares, isinstance(), .shape/.dtype/... reads)."""
+    if isinstance(node, ast.Compare) and all(
+            isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+        return set()
+    if isinstance(node, ast.Call) and call_name(node.func) in (
+            "isinstance", "len", "getattr", "hasattr", "callable"):
+        return set()
+    if isinstance(node, ast.Attribute) and node.attr in _SHAPE_ATTRS:
+        return set()
+    if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+        return {node.id} & tracer_params
+    out = set()
+    for child in ast.iter_child_nodes(node):
+        out |= _tracer_refs(child, tracer_params)
+    return out
+
+
+def _check_tracer_branches(src: SourceFile, tf: TracedFn) -> list:
+    findings = []
+    tracers = _param_names(tf.node) - tf.static
+    for node in ast.walk(tf.node):
+        test = None
+        if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+            test = node.test
+        elif isinstance(node, ast.Assert):
+            test = node.test
+        if test is None:
+            continue
+        refs = _tracer_refs(test, tracers)
+        if refs:
+            what = "assert" if isinstance(node, ast.Assert) else \
+                "while" if isinstance(node, ast.While) else "if"
+            findings.append(Finding(
+                "TRC001", src.path, node.lineno,
+                f"Python {what} branches on tracer argument(s) "
+                f"{sorted(refs)} inside traced function "
+                f"{tf.node.name!r}",
+                hint="use jax.lax.cond/select/while_loop, or mark the "
+                     "argument static (static_argnames / partial kwarg)"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# TRC002: array constants captured by kernels
+# ---------------------------------------------------------------------------
+
+def _module_array_consts(src: SourceFile) -> set:
+    """Module-level names bound to an array-constructor call."""
+    out = set()
+    for name, node in module_level_names(src.tree).items():
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            tail = call_name(node.value.func).rsplit(".", 1)[-1]
+            if tail in _ARRAY_CTORS:
+                out.add(name)
+    return out
+
+
+def _enclosing_locals(src: SourceFile, kernel) -> set:
+    """Names bound by functions that lexically enclose `kernel`."""
+    out: set = set()
+
+    def walk(node, stack):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if child is kernel:
+                    for fn in stack:
+                        out.update(assigned_names(fn))
+                walk(child, stack + [child])
+            else:
+                walk(child, stack)
+
+    walk(src.tree, [])
+    return out
+
+
+def _check_kernel_captures(src: SourceFile, tf: TracedFn) -> list:
+    if tf.kind != "kernel":
+        return []
+    findings = []
+    bound = assigned_names(tf.node) | tf.static
+    mod_names = module_level_names(src.tree)
+    array_consts = _module_array_consts(src)
+    enclosing = _enclosing_locals(src, tf.node)
+    flagged = set()
+    for node in ast.walk(tf.node):
+        if not (isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load)):
+            continue
+        name = node.id
+        if name in bound or name in flagged:
+            continue
+        if name in array_consts or (name in enclosing
+                                    and name not in mod_names):
+            flagged.add(name)
+            origin = ("module-level array constant" if name in array_consts
+                      else "enclosing-scope local")
+            findings.append(Finding(
+                "TRC002", src.path, node.lineno,
+                f"pallas kernel {tf.node.name!r} captures {origin} "
+                f"{name!r}",
+                hint="pass it as an explicit kernel operand (BlockSpec) or "
+                     "bind it via functools.partial if it is a static "
+                     "scalar"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# TRC003: host sync while holding a lock
+# ---------------------------------------------------------------------------
+
+def _is_host_sync(call: ast.Call) -> str | None:
+    name = call_name(call.func)
+    if name in _HOST_SYNC_CALLS:
+        return name
+    if isinstance(call.func, ast.Attribute) \
+            and call.func.attr in _HOST_SYNC_METHODS:
+        return f".{call.func.attr}()"
+    return None
+
+
+def _check_host_sync(src: SourceFile) -> list:
+    findings = []
+    lock_attrs: set = set()
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.ClassDef):
+            lock_attrs |= lock_attrs_of_class(node)
+
+    def visit(node, held_depth):
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            acq = 0
+            for item in node.items:
+                ce = item.context_expr
+                if (isinstance(ce, ast.Attribute)
+                        and isinstance(ce.value, ast.Name)
+                        and ce.value.id == "self" and ce.attr in lock_attrs):
+                    acq = 1
+            for stmt in node.body:
+                visit(stmt, held_depth + acq)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            for child in ast.iter_child_nodes(node):
+                visit(child, 0)
+            return
+        if held_depth and isinstance(node, ast.Call):
+            sync = _is_host_sync(node)
+            if sync:
+                findings.append(Finding(
+                    "TRC003", src.path, node.lineno,
+                    f"host sync {sync} while holding a serving lock",
+                    hint="move the sync outside the `with` block; hold "
+                         "locks only for bookkeeping"))
+        for child in ast.iter_child_nodes(node):
+            visit(child, held_depth)
+
+    visit(src.tree, 0)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# TRC004: cache keys must cover executable closures
+# ---------------------------------------------------------------------------
+
+def _names_in(node) -> set:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _check_cache_keys(src: SourceFile) -> list:
+    findings = []
+    mod_names = set(module_level_names(src.tree))
+    for fn in _local_functions(src.tree).values():
+        cached_calls = [n for n in ast.walk(fn)
+                        if isinstance(n, ast.Call)
+                        and call_name(n.func).endswith("._cached")
+                        and len(n.args) >= 2
+                        and isinstance(n.args[0], ast.Name)
+                        and isinstance(n.args[1], ast.Name)]
+        if not cached_calls:
+            continue
+        # routing functions re-bind `make` per route: resolve each
+        # _cached(key, make) call to the NEAREST preceding def of that name
+        defs = sorted((n.lineno, n) for n in ast.walk(fn)
+                      if isinstance(n, ast.FunctionDef) and n is not fn)
+        key_names: dict = {}
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                key_names.setdefault(node.targets[0].id, set()).update(
+                    _names_in(node.value))
+        for call in cached_calls:
+            covered = key_names.get(call.args[0].id, set())
+            make = None
+            for line, node in defs:
+                if node.name == call.args[1].id and line < call.lineno:
+                    make = node
+            if make is None:
+                continue
+            # the executable body: innermost def inside make
+            bodies = [n for n in ast.walk(make)
+                      if isinstance(n, ast.FunctionDef) and n is not make]
+            for body in bodies:
+                bound = assigned_names(body)
+                for node in ast.walk(body):
+                    if not (isinstance(node, ast.Name)
+                            and isinstance(node.ctx, ast.Load)):
+                        continue
+                    name = node.id
+                    if name in bound or name in mod_names \
+                            or name in ("self",) or name in covered:
+                        continue
+                    # bound inside make (but outside body) and not keyed
+                    covered.add(name)       # report once per name
+                    findings.append(Finding(
+                        "TRC004", src.path, node.lineno,
+                        f"cached executable {body.name!r} closes over "
+                        f"{name!r} which is missing from cache key "
+                        f"{call.args[0].id!r}",
+                        hint=f"add {name!r} to the key tuple (or derive it "
+                             "inside the traced body)"))
+    return findings
+
+
+def run(files: list) -> list:
+    findings: list = []
+    for src in files:
+        traced = traced_functions(src)
+        for tf in traced:
+            findings += _check_tracer_branches(src, tf)
+            findings += _check_kernel_captures(src, tf)
+        findings += _check_host_sync(src)
+        findings += _check_cache_keys(src)
+    return findings

@@ -206,6 +206,13 @@ class ExecInfo:
 class QueryEngine:
     """Dispatches batched BVH queries to bruteforce / pallas / loop."""
 
+    #: reprolint lock discipline (analysis/locks.py): the executable cache
+    #: and its stats counters are only coherent under _cache_lock — the
+    #: serving pipeline hits this engine from scheduler AND maintenance
+    #: threads concurrently.
+    _REPROLINT_GUARDED_BY = {"_executables": "_cache_lock",
+                             "stats": "_cache_lock"}
+
     def __init__(self, config: EngineConfig | None = None):
         self.config = config or EngineConfig()
         self.stats = EngineStats()
@@ -349,6 +356,15 @@ class QueryEngine:
     # bump ``stats.jit_traces`` so tests can assert zero recompiles after
     # warmup.
 
+    def _note_trace(self):
+        """Traced bodies call this on every ACTUAL retrace. Tracing happens
+        on the first invocation of a cached executable — outside _cached's
+        critical section — so taking the lock here cannot deadlock, and the
+        counter stays exact under concurrent schedulers (two threads racing
+        an unlocked += lose increments)."""
+        with self._cache_lock:
+            self.stats.jit_traces += 1
+
     def _cached(self, key, make):
         # locked: concurrent server threads must not compile the same key
         # twice or lose stats increments (IndexStore promises this level of
@@ -386,15 +402,19 @@ class QueryEngine:
         """
         route = self.route_spatial(bvh, predicates, capacity)
         bq = self._rule("spatial", bvh, None).block_q
-        key = (route, "spatial", capacity, bq) + self._shape_key(bvh, predicates)
+        # every value a traced body closes over is named IN the key —
+        # reprolint TRC004 pins this (a closed-over value missing from the
+        # key would let two different executables share one cache slot)
         nq = len(predicates)
+        fine_sqrt = isinstance(bvh.values, G.Points)
+        getter = bvh._getter
+        key = (route, "spatial", capacity, bq, nq, fine_sqrt,
+               getter) + self._shape_key(bvh, predicates)
 
         if route == ROUTE_PALLAS:
-            fine_sqrt = isinstance(bvh.values, G.Points)
-
             def make():
                 def body(tree, q_lo, q_hi, r):
-                    self.stats.jit_traces += 1
+                    self._note_trace()
                     return _pallas_spatial_call(tree, q_lo, q_hi, r,
                                                 capacity=capacity,
                                                 fine_sqrt=fine_sqrt, bq=bq)
@@ -405,11 +425,9 @@ class QueryEngine:
             return fn(bvh.tree, q_lo, q_hi, r), ExecInfo(route, hit)
 
         if route == ROUTE_BRUTEFORCE:
-            getter = bvh._getter
-
             def make():
                 def body(values, preds):
-                    self.stats.jit_traces += 1
+                    self._note_trace()
                     from .brute_force import BruteForce
                     return self.bruteforce_fill(
                         BruteForce(values, getter), preds, capacity)
@@ -420,7 +438,7 @@ class QueryEngine:
 
         def make():
             def body(tree, values, preds):
-                self.stats.jit_traces += 1
+                self._note_trace()
                 from . import callbacks as CB
                 from . import traversal as T
                 cb, s0 = CB.collect_hits(capacity)
@@ -438,12 +456,13 @@ class QueryEngine:
         route = self.route_knn(bvh, predicates)
         k = predicates.k
         bq = self._rule("knn", bvh, None).block_q
-        key = (route, "knn", k, bq) + self._shape_key(bvh, predicates)
+        getter = bvh._getter
+        key = (route, "knn", k, bq, getter) + self._shape_key(bvh, predicates)
 
         if route == ROUTE_PALLAS:
             def make():
                 def body(tree, qc):
-                    self.stats.jit_traces += 1
+                    self._note_trace()
                     return _pallas_knn_call(tree, qc, k=k, bq=bq)
                 return jax.jit(body)
 
@@ -451,11 +470,9 @@ class QueryEngine:
             return fn(bvh.tree, G.centroid(predicates.geom)), ExecInfo(route, hit)
 
         if route == ROUTE_BRUTEFORCE:
-            getter = bvh._getter
-
             def make():
                 def body(values, preds):
-                    self.stats.jit_traces += 1
+                    self._note_trace()
                     from .brute_force import BruteForce
                     bf = BruteForce(values, getter)
                     return bf._knn_impl(preds, bf.policy)
@@ -466,7 +483,7 @@ class QueryEngine:
 
         def make():
             def body(tree, values, preds):
-                self.stats.jit_traces += 1
+                self._note_trace()
                 from . import traversal as T
                 return T.traverse_knn(tree, values, preds, k)
             return jax.jit(body)
@@ -482,7 +499,7 @@ class QueryEngine:
 
         def make():
             def body(tree, values, rays_):
-                self.stats.jit_traces += 1
+                self._note_trace()
                 from . import traversal as T
                 return T.traverse_knn(tree, values, P.RayNearest(rays_, k), k)
             return jax.jit(body)

@@ -125,7 +125,18 @@ class RouteTable:
     # -- constructors ------------------------------------------------------
     @classmethod
     def default(cls) -> "RouteTable":
-        return cls(rules={"default": RouteRule()})
+        """Built-in per-op rules. The kNN and callback caps are tighter
+        than the spatial fill cap because their VMEM cost differs: a kNN
+        candidate list is (block_q, k) float32 + int32 resident for the
+        whole sweep, and a callback state row rides in AND out — at the
+        spatial cap (4096) either blows the ~16 MB budget once the tree
+        tables are staged (the PLK001 sanitizer pins the arithmetic).
+        Queries beyond these caps route to the while-loop path."""
+        return cls(rules={
+            "default": RouteRule(),
+            "knn": RouteRule(pallas_max_capacity=256),
+            "callback": RouteRule(pallas_max_capacity=1024),
+        })
 
     @classmethod
     def single(cls, *, build_engine: str = "auto", source: str = "synthesized",

@@ -121,3 +121,24 @@ def bruteforce_knn_pallas(queries, points, k: int, *, n_actual: int | None = Non
         compiler_params=compiler_params(dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(queries, points)
+
+
+# ---------------------------------------------------------------------------
+# reprolint sanitizer spec (analysis/pallas_trace.py)
+# ---------------------------------------------------------------------------
+
+#: largest k the streaming top-k scratch is declared for — matches the
+#: route table's kNN pallas_max_capacity (the same VMEM pressure bounds
+#: both: the running-best scratch is (bq, k) x2 resident all sweep long)
+REPROLINT_MAX_K = 256
+
+
+def REPROLINT_SPECS():
+    def knn_launch():
+        bq, bn, d = 256, 512, 128
+        bruteforce_knn_pallas(
+            jnp.zeros((bq, d), jnp.float32), jnp.zeros((4 * bn, d),
+                                                       jnp.float32),
+            REPROLINT_MAX_K, bq=bq, bn=bn, interpret=True)
+
+    return [{"name": "bruteforce-knn@max-k", "call": knn_launch}]

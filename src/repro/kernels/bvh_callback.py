@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import sanitize
 from ._compat import compiler_params
 from .ops import _round_up
 
@@ -156,8 +157,6 @@ def _pad_q(a, qp):
     return jnp.concatenate([a, pad], axis=0)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("callback", "bq", "interpret"))
 def bvh_traverse_callback(node_lo, node_hi, rope, left_child, range_last,
                           leaf_perm, values, predicates, callback, state0,
                           *, min_pos=None, bq: int = 256,
@@ -173,8 +172,22 @@ def bvh_traverse_callback(node_lo, node_hi, rope, left_child, range_last,
     rope sentinel on the first step and can never record a hit —
     predicate contents need no special padding values.
     """
+    final = _bvh_traverse_callback_jit(
+        node_lo, node_hi, rope, left_child, range_last, leaf_perm, values,
+        predicates, callback, state0, min_pos=min_pos, bq=bq,
+        interpret=interpret)
+    sanitize.check_state_tree(final, kernel="bvh_traverse_callback")
+    return final
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("callback", "bq", "interpret"))
+def _bvh_traverse_callback_jit(node_lo, node_hi, rope, left_child,
+                               range_last, leaf_perm, values, predicates,
+                               callback, state0, *, min_pos=None,
+                               bq: int = 256, interpret: bool | None = None):
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = sanitize.interpret_default()
     n = leaf_perm.shape[0]
     pred_leaves, pred_def = jax.tree_util.tree_flatten(predicates)
     state_leaves, state_def = jax.tree_util.tree_flatten(state0)
@@ -248,3 +261,39 @@ def bvh_traverse_callback(node_lo, node_hi, rope, left_child, range_last,
         outs = [outs]
     final = [o[:q].astype(dt) for o, dt in zip(outs, state_dtypes)]
     return jax.tree_util.tree_unflatten(state_def, final)
+
+
+# ---------------------------------------------------------------------------
+# reprolint sanitizer spec (analysis/pallas_trace.py)
+# ---------------------------------------------------------------------------
+
+def REPROLINT_SPECS():
+    """Worst case the callback route admits: the whole tree staged at
+    ``pallas_max_nodes``, values staged whole, plus a state row of
+    ``pallas_max_capacity`` floats per query lane (``engine._state_width``
+    is gated on exactly that)."""
+    from ..core import geometry as G
+    from ..core import predicates as P
+    from ..core.route_table import RouteTable
+
+    rule = RouteTable.default().rule("callback")
+
+    def callback_launch():
+        n = (rule.pallas_max_nodes + 1) // 2
+        m = 2 * n - 1
+        q = rule.block_q
+        width = rule.pallas_max_capacity
+        values = G.Points(jnp.zeros((n, 8), jnp.float32))
+        preds = P.Intersects(G.Points(jnp.zeros((q, 8), jnp.float32)))
+        state0 = jnp.zeros((q, width), jnp.float32)
+
+        def cb(state, pred, value, idx, t):
+            return state.at[0].set(t), jnp.bool_(False)
+
+        _bvh_traverse_callback_jit.__wrapped__(
+            jnp.zeros((m, 8), jnp.float32), jnp.zeros((m, 8), jnp.float32),
+            jnp.zeros((m,), jnp.int32), jnp.zeros((n - 1,), jnp.int32),
+            jnp.zeros((m,), jnp.int32), jnp.zeros((n,), jnp.int32),
+            values, preds, cb, state0, bq=rule.block_q, interpret=True)
+
+    return [{"name": "callback@route-limits", "call": callback_launch}]

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import sanitize
 from ._compat import compiler_params
 from .ops import _pad_cols, _pad_rows, _round_up
 
@@ -119,8 +120,6 @@ def _spatial_kernel(qlo_ref, qhi_ref, r_ref, minpos_ref, node_lo_ref,
     idx_ref[...] = buf
 
 
-@functools.partial(jax.jit, static_argnames=("capacity", "fine_sqrt", "bq",
-                                             "interpret"))
 def bvh_traverse_spatial(node_lo, node_hi, rope, left_child, range_last,
                          leaf_perm, q_lo, q_hi, radius, *, capacity: int = 1,
                          fine_sqrt: bool = False, min_pos=None, bq: int = 256,
@@ -136,8 +135,24 @@ def bvh_traverse_spatial(node_lo, node_hi, rope, left_child, range_last,
     matched original indices in traversal order (-1 padding) — the exact
     contract of ``callbacks.collect_hits``.
     """
+    counts, buf = _bvh_traverse_spatial_jit(
+        node_lo, node_hi, rope, left_child, range_last, leaf_perm,
+        q_lo, q_hi, radius, capacity=capacity, fine_sqrt=fine_sqrt,
+        min_pos=min_pos, bq=bq, interpret=interpret)
+    sanitize.check_spatial(counts, buf, n=leaf_perm.shape[0],
+                           kernel="bvh_traverse_spatial")
+    return counts, buf
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "fine_sqrt", "bq",
+                                             "interpret"))
+def _bvh_traverse_spatial_jit(node_lo, node_hi, rope, left_child, range_last,
+                              leaf_perm, q_lo, q_hi, radius, *,
+                              capacity: int = 1, fine_sqrt: bool = False,
+                              min_pos=None, bq: int = 256,
+                              interpret: bool | None = None):
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = sanitize.interpret_default()
     q, dim = q_lo.shape
     n = leaf_perm.shape[0]
     if q == 0:
@@ -248,7 +263,6 @@ def _knn_kernel(q_ref, node_lo_ref, node_hi_ref, rope_ref, left_ref,
     idx_ref[...] = idxs
 
 
-@functools.partial(jax.jit, static_argnames=("k", "bq", "interpret"))
 def bvh_traverse_knn(node_lo, node_hi, rope, left_child, leaf_perm, queries,
                      *, k: int, bq: int = 256, interpret: bool | None = None):
     """Fused stackless k-nearest traversal for (Q, dim) query points.
@@ -256,8 +270,20 @@ def bvh_traverse_knn(node_lo, node_hi, rope, left_child, leaf_perm, queries,
     Returns (dists, idxs): (Q, k) float32/int32, ascending, padded with
     (inf, -1) when fewer than k leaves are reachable.
     """
+    dists, idxs = _bvh_traverse_knn_jit(
+        node_lo, node_hi, rope, left_child, leaf_perm, queries, k=k, bq=bq,
+        interpret=interpret)
+    sanitize.check_knn(dists, idxs, n=leaf_perm.shape[0],
+                       kernel="bvh_traverse_knn")
+    return dists, idxs
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bq", "interpret"))
+def _bvh_traverse_knn_jit(node_lo, node_hi, rope, left_child, leaf_perm,
+                          queries, *, k: int, bq: int = 256,
+                          interpret: bool | None = None):
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = sanitize.interpret_default()
     q, dim = queries.shape
     n = leaf_perm.shape[0]
     if q == 0:
@@ -295,3 +321,47 @@ def bvh_traverse_knn(node_lo, node_hi, rope, left_child, leaf_perm, queries,
         interpret=interpret,
     )(qc, nlo, nhi, rope, left_child, leaf_perm)
     return dists[:q], idxs[:q]
+
+
+# ---------------------------------------------------------------------------
+# reprolint sanitizer specs (analysis/pallas_trace.py)
+# ---------------------------------------------------------------------------
+
+def _zeros_tree(n: int, dim: int):
+    m = 2 * n - 1
+    return (jnp.zeros((m, dim), jnp.float32), jnp.zeros((m, dim), jnp.float32),
+            jnp.zeros((m,), jnp.int32), jnp.zeros((n - 1,), jnp.int32),
+            jnp.zeros((m,), jnp.int32), jnp.zeros((n,), jnp.int32))
+
+
+def REPROLINT_SPECS():
+    """Worst-case launches the route table admits, for the PLK001/PLK002
+    sanitizer. Thunks call the RAW (un-jitted) wrappers so the analyzer's
+    pallas_call spy always fires. Lazy core import: kernels must not pull
+    core in at module import time (engine -> kernels would cycle)."""
+    from ..core.route_table import RouteTable
+
+    table = RouteTable.default()
+
+    def spatial():
+        rule = table.rule("spatial")
+        n = (rule.pallas_max_nodes + 1) // 2       # 2n-1 == pallas_max_nodes
+        nlo, nhi, rope, left, rlast, perm = _zeros_tree(n, 8)
+        q = rule.block_q
+        _bvh_traverse_spatial_jit.__wrapped__(
+            nlo, nhi, rope, left, rlast, perm,
+            jnp.zeros((q, 8), jnp.float32), jnp.zeros((q, 8), jnp.float32),
+            jnp.zeros((q,), jnp.float32), capacity=rule.pallas_max_capacity,
+            fine_sqrt=True, bq=rule.block_q, interpret=True)
+
+    def knn():
+        rule = table.rule("knn")
+        n = (rule.pallas_max_nodes + 1) // 2
+        nlo, nhi, rope, left, _, perm = _zeros_tree(n, 8)
+        q = rule.block_q
+        _bvh_traverse_knn_jit.__wrapped__(
+            nlo, nhi, rope, left, perm, jnp.zeros((q, 8), jnp.float32),
+            k=rule.pallas_max_capacity, bq=rule.block_q, interpret=True)
+
+    return [{"name": "spatial@route-limits", "call": spatial},
+            {"name": "knn@route-limits", "call": knn}]

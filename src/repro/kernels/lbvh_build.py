@@ -50,6 +50,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from ..core import morton as M
+from . import sanitize
 from ._compat import compiler_params
 from .ops import _round_up
 
@@ -185,7 +186,7 @@ def karras_ranges_pallas(hi, lo, idx, n: int, max_log2: int, *,
                          bn: int = 512, interpret: bool | None = None):
     """Pallas spelling of :func:`karras_ranges_fused` (bit-identical ints)."""
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = sanitize.interpret_default()
     n1 = n - 1
     bn_eff = min(bn, _round_up(n1, 8))
     np_ = _round_up(n1, bn_eff)
@@ -207,7 +208,21 @@ def karras_ranges_pallas(hi, lo, idx, n: int, max_log2: int, *,
 def karras_ranges(hi, lo, idx, n: int, max_log2: int):
     """Backend-static dispatch: the Pallas kernel on TPU, the delta-RMQ jit
     twin elsewhere (interpret mode would simulate the kernel op-by-op and
-    lose to the twin; both produce identical integers)."""
+    lose to the twin; both produce identical integers). Under
+    REPRO_SANITIZE both twins run on concrete inputs and must agree
+    bit-for-bit — the build-conformance invariant, checked live."""
+    if sanitize.enabled() and sanitize.is_concrete(hi, lo, idx):
+        pk = karras_ranges_pallas(hi, lo, idx, n, max_log2)
+        fk = karras_ranges_fused(hi, lo, idx, n, max_log2)
+        for a, b in zip(pk, fk):
+            if not bool(jnp.all(a == b)):
+                raise AssertionError(
+                    "REPRO_SANITIZE: karras_ranges_pallas disagrees with "
+                    "karras_ranges_fused")
+        for r, kern in ((pk, "karras_ranges_pallas"),
+                        (fk, "karras_ranges_fused")):
+            sanitize.check_karras(*r, n=n, kernel=kern)
+        return fk
     if jax.default_backend() == "tpu":
         return karras_ranges_pallas(hi, lo, idx, n, max_log2)
     return karras_ranges_fused(hi, lo, idx, n, max_log2)
@@ -239,3 +254,21 @@ def aabb_rmq(leaf_lo, leaf_hi, first, last, max_log2: int):
     off = last - (jnp.int32(1) << k) + 1
     combo = jnp.minimum(tbl[k, first], tbl[k, off])
     return combo[:, :dim], -combo[:, dim:]
+
+
+# ---------------------------------------------------------------------------
+# reprolint sanitizer spec (analysis/pallas_trace.py)
+# ---------------------------------------------------------------------------
+
+#: largest build the pallas ranges kernel is declared for: 2^20 leaves at
+#: 12 B/leaf of key tables stays well inside the 16 MB VMEM budget
+REPROLINT_MAX_LEAVES = 1 << 20
+
+
+def REPROLINT_SPECS():
+    def ranges_launch():
+        n = REPROLINT_MAX_LEAVES
+        z = jnp.zeros((n,), jnp.uint32)
+        karras_ranges_pallas(z, z, z, n, max_log2=20, interpret=True)
+
+    return [{"name": "karras-ranges@max-leaves", "call": ranges_launch}]

@@ -13,6 +13,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from . import sanitize
 from .bruteforce_knn import bruteforce_knn_pallas
 from .flash_attention import flash_attention_pallas
 from .morton import morton64_pallas
@@ -22,7 +23,9 @@ __all__ = ["morton64", "bruteforce_knn", "ray_box_nearest", "flash_attention"]
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    # REPRO_SANITIZE forces interpret mode even on TPU (read at trace
+    # time — process-stable; see kernels/sanitize.py)
+    return sanitize.interpret_default()
 
 
 def _round_up(x: int, m: int) -> int:
@@ -61,9 +64,16 @@ def morton64(coords, scene_lo=None, scene_hi=None, *, bn: int = 1024):
     return hi[:n], lo[:n]
 
 
-@partial(jax.jit, static_argnames=("k", "bq", "bn"))
 def bruteforce_knn(queries, points, k: int, *, bq: int = 256, bn: int = 512):
     """Exact kNN: (Q, dim) x (N, dim) -> (dists, idx) (Q, k) ascending."""
+    d, i = _bruteforce_knn_jit(queries, points, k, bq=bq, bn=bn)
+    sanitize.check_knn(d, i, n=points.shape[0], kernel="bruteforce_knn")
+    return d, i
+
+
+@partial(jax.jit, static_argnames=("k", "bq", "bn"))
+def _bruteforce_knn_jit(queries, points, k: int, *, bq: int = 256,
+                        bn: int = 512):
     q, dim = queries.shape
     n, _ = points.shape
     d_pad = _round_up(dim, 128)

@@ -1,0 +1,98 @@
+"""REPRO_SANITIZE: interpret-mode kernel re-execution with OOB/NaN checks.
+
+``REPRO_SANITIZE=1`` flips every Pallas kernel in this package into
+interpret mode (the kernel body runs as pure JAX op-by-op — OOB block
+reads fault instead of wrapping) and arms the output assertions below on
+every EAGER kernel call. The checks are the kernels' public contracts:
+
+  * spatial fill — counts in [0, n], collected indices in [-1, n);
+  * kNN — distances non-NaN and ascending per row, indices in [-1, n);
+  * karras ranges — 0 <= first <= i <= last <= n-2+1 and gamma inside
+    [first, last) (the split must fall strictly inside the range);
+  * callback — no NaN in any float state leaf.
+
+Calls made from inside another trace (the engine's cached executables)
+see tracer outputs and skip the concrete checks — the tier-1 sanitize
+smoke (``python -m repro.analysis --sanitize-smoke``) drives the eager
+paths so every kernel gets at least one armed run.
+
+The env var is read per call for ``enabled()`` but at TRACE time for the
+interpret default baked into a jitted wrapper — flip it before the first
+kernel call of the process (the smoke lane sets it at entry).
+"""
+from __future__ import annotations
+
+import os
+
+__all__ = ["enabled", "interpret_default", "is_concrete", "check_spatial",
+           "check_knn", "check_karras", "check_state_tree"]
+
+
+def enabled() -> bool:
+    return os.environ.get("REPRO_SANITIZE", "") not in ("", "0", "false")
+
+
+def interpret_default() -> bool:
+    """Interpret-mode default for kernels whose caller passed None:
+    non-TPU backends always interpret; REPRO_SANITIZE forces it even on
+    TPU so the sanitizer sees pure-JAX kernel semantics."""
+    import jax
+    return enabled() or jax.default_backend() != "tpu"
+
+
+def is_concrete(*arrays) -> bool:
+    import jax
+    return not any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
+def _fail(kernel: str, what: str):
+    raise AssertionError(
+        f"REPRO_SANITIZE: {kernel} violated its output contract: {what}")
+
+
+def check_spatial(counts, idx_buf, *, n: int, kernel: str):
+    import jax.numpy as jnp
+    if not (enabled() and is_concrete(counts, idx_buf)):
+        return
+    if counts.size and (int(jnp.min(counts)) < 0
+                        or int(jnp.max(counts)) > n):
+        _fail(kernel, f"counts outside [0, {n}]")
+    if idx_buf.size and (int(jnp.min(idx_buf)) < -1
+                         or int(jnp.max(idx_buf)) >= n):
+        _fail(kernel, f"collected indices outside [-1, {n})")
+
+
+def check_knn(dists, idxs, *, n: int, kernel: str):
+    import jax.numpy as jnp
+    if not (enabled() and is_concrete(dists, idxs)):
+        return
+    if bool(jnp.any(jnp.isnan(dists))):
+        _fail(kernel, "NaN distance")
+    if dists.shape[1] > 1 and bool(jnp.any(dists[:, 1:] < dists[:, :-1])):
+        _fail(kernel, "distances not ascending")
+    if idxs.size and (int(jnp.min(idxs)) < -1 or int(jnp.max(idxs)) >= n):
+        _fail(kernel, f"neighbor indices outside [-1, {n})")
+
+
+def check_karras(first, last, gamma, *, n: int, kernel: str):
+    import jax.numpy as jnp
+    if not (enabled() and is_concrete(first, last, gamma)):
+        return
+    i = jnp.arange(n - 1, dtype=first.dtype)
+    ok = ((first >= 0) & (first <= i) & (i <= last) & (last <= n - 1)
+          & (gamma >= first) & (gamma < last))
+    if not bool(jnp.all(ok)):
+        _fail(kernel, "karras (first, last, gamma) outside the node "
+                      "containment invariants")
+
+
+def check_state_tree(state, *, kernel: str):
+    import jax
+    import jax.numpy as jnp
+    leaves = jax.tree_util.tree_leaves(state)
+    if not (enabled() and is_concrete(*leaves)):
+        return
+    for leaf in leaves:
+        if jnp.issubdtype(leaf.dtype, jnp.floating) \
+                and bool(jnp.any(jnp.isnan(leaf))):
+            _fail(kernel, "NaN in callback state leaf")

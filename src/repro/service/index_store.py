@@ -19,6 +19,7 @@ half-updated index.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import threading
 
@@ -50,6 +51,12 @@ class IndexVersion:
 
 class IndexStore:
     """Thread-safe name -> IndexVersion registry with refit-aware updates."""
+
+    #: reprolint lock discipline (analysis/locks.py): the registry maps and
+    #: the pin refcounts form one invariant — _trim consults _pins while
+    #: mutating _history — so all three share the registry lock.
+    _REPROLINT_GUARDED_BY = {"_live": "_lock", "_history": "_lock",
+                             "_pins": "_lock"}
 
     def __init__(self, engine: E.QueryEngine | None = None, *,
                  rebuild_threshold: float = 1.5, keep_versions: int = 3,
@@ -105,6 +112,16 @@ class IndexStore:
                 self._pins[key] = n
             self._trim(entry.name)
 
+    @contextlib.contextmanager
+    def pinned(self, name: str, version: int | None = None):
+        """``with store.pinned(name) as entry:`` — pin/release balanced on
+        every control-flow path (the shape reprolint LCK003 wants)."""
+        entry = self.pin(name, version)
+        try:
+            yield entry
+        finally:
+            self.release(entry)
+
     # -- writes ------------------------------------------------------------
     def build(self, name: str, values,
               indexable_getter=default_indexable_getter) -> IndexVersion:
@@ -157,7 +174,7 @@ class IndexStore:
             self._trim(entry.name)
         return entry
 
-    def _trim(self, name: str):
+    def _trim(self, name: str):  # reprolint: holds=_lock
         """Evict unpinned versions beyond keep_versions (lock held). The
         newest keep_versions entries are always retained — a pinned old
         version must never push the LIVE version out of history — and

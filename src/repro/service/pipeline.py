@@ -155,6 +155,14 @@ class Ticket:
 class ServingPipeline:
     """Deadline-aware async frontend over IndexStore + Batcher + engine."""
 
+    #: reprolint lock discipline (analysis/locks.py). _closing is NOT here:
+    #: it used to be a plain bool guarded by _cv but was also read under
+    #: _maint_cv (a cross-lock access the checker rejects) — it is now a
+    #: threading.Event, atomic on its own.
+    _REPROLINT_GUARDED_BY = {"_queues": "_cv", "_est": "_cv",
+                             "_stats": "_cv", "_maint": "_maint_cv",
+                             "_maint_inflight": "_maint_cv"}
+
     def __init__(self, store: IndexStore | None = None,
                  engine: E.QueryEngine | None = None,
                  config: PipelineConfig | None = None):
@@ -173,7 +181,8 @@ class ServingPipeline:
         self._queues: dict[tuple, collections.deque[Ticket]] = {}
         self._est: dict[tuple, float] = {}          # (key, bucket) -> EWMA us
         self._stats = PipelineStats()
-        self._closing = False
+        self._closing = threading.Event()           # atomic: read under
+                                                    # BOTH cvs (see above)
 
         self._maint_cv = threading.Condition()      # maintenance inbox
         self._maint: collections.OrderedDict[str, object] = \
@@ -199,8 +208,8 @@ class ServingPipeline:
     def close(self, timeout: float = 30.0):
         """Drain: serve everything already submitted, finish queued
         maintenance, stop both threads. Idempotent."""
+        self._closing.set()
         with self._cv:
-            self._closing = True
             self._cv.notify_all()
         with self._maint_cv:
             self._maint_cv.notify_all()
@@ -220,7 +229,7 @@ class ServingPipeline:
         the same name coalesce to the newest values (a moving-points
         stream only ever needs the latest geometry)."""
         with self._maint_cv:
-            if self._closing:
+            if self._closing.is_set():
                 raise RuntimeError("pipeline is closed")
             self._maint[name] = values
             with self._cv:
@@ -249,7 +258,7 @@ class ServingPipeline:
         validate_kind(request.kind)
         ticket = Ticket(request, deadline_us, time.perf_counter())
         with self._cv:
-            if self._closing:
+            if self._closing.is_set():
                 raise RuntimeError("pipeline is closed")
             key = self.batcher.group_key(request)
             self._queues.setdefault(key, collections.deque()).append(ticket)
@@ -273,6 +282,7 @@ class ServingPipeline:
             index, kinds_ks, max_bucket, dim)
 
     # -- scheduler ----------------------------------------------------------
+    # reprolint: holds=_cv
     def _close_by(self, key: tuple, tickets: collections.deque[Ticket],
                   now: float) -> float:
         """Absolute perf_counter time by which this group must dispatch:
@@ -290,7 +300,7 @@ class ServingPipeline:
                         * 1e-6)
         return close
 
-    def _pick(self, now: float):
+    def _pick(self, now: float):  # reprolint: holds=_cv
         """Under the lock: choose one group ready to dispatch (full, out of
         deadline budget, or draining). Returns (key, tickets, reason) or
         (None, None, wait_seconds)."""
@@ -300,8 +310,8 @@ class ServingPipeline:
             if not q:
                 continue
             rows = sum(t.request.m for t in q)
-            if rows >= max_rows or self._closing:
-                reason = "drain" if self._closing and rows < max_rows \
+            if rows >= max_rows or self._closing.is_set():
+                reason = "drain" if self._closing.is_set() and rows < max_rows \
                     else "full"
                 # take members up to max_bucket rows (always >= 1 request:
                 # a single over-sized request dispatches alone at its
@@ -328,7 +338,7 @@ class ServingPipeline:
                     if taken is not None:
                         self._stats.queue_depth -= len(taken)
                         break
-                    if self._closing:
+                    if self._closing.is_set():
                         return
                     # extra is seconds until the earliest forced close (or
                     # None when idle); clamp so a just-passed deadline
@@ -403,7 +413,7 @@ class ServingPipeline:
         while True:
             with self._maint_cv:
                 while not self._maint:
-                    if self._closing:
+                    if self._closing.is_set():
                         return
                     self._maint_cv.wait()
                 name, values = self._maint.popitem(last=False)

@@ -210,7 +210,10 @@ class QueryServer:
 
     # -- internals ---------------------------------------------------------
     def _dispatch(self, group: Group, responses: list):
-        entry = self.store.get(group.index)
-        for rid, resp in execute_group(self.engine, self.config,
-                                       entry, group).items():
-            responses[rid] = resp
+        # Pin, not get: a concurrent update_index swap during the dispatch
+        # must not let history trimming evict the version this batch runs
+        # against (the docstring's "pinned index version" promise).
+        with self.store.pinned(group.index) as entry:
+            for rid, resp in execute_group(self.engine, self.config,
+                                           entry, group).items():
+                responses[rid] = resp

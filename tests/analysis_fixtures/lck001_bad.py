@@ -1,0 +1,19 @@
+"""Fixture: guarded attribute written without its lock (LCK001)."""
+import threading
+
+
+class Registry:
+    _REPROLINT_GUARDED_BY = {"_items": "_lock"}
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items = {}
+
+    def put(self, key, value):
+        self._items[key] = value        # BAD: no lock held
+
+    def closure_escape(self):
+        with self._lock:
+            def later():
+                return len(self._items)  # BAD: closure runs without the lock
+            return later

@@ -1,0 +1,22 @@
+"""Fixture twin: every guarded access holds the lock (LCK001-clean)."""
+import threading
+
+
+class Registry:
+    _REPROLINT_GUARDED_BY = {"_items": "_lock"}
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items = {}
+
+    def put(self, key, value):
+        with self._lock:
+            self._items[key] = value
+
+    # reprolint: holds=_lock
+    def _size_locked(self):
+        return len(self._items)
+
+    def size(self):
+        with self._lock:
+            return self._size_locked()

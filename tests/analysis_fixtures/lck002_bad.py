@@ -1,0 +1,20 @@
+"""Fixture: two methods acquire the same two locks in opposite orders
+(LCK002 deadlock hazard)."""
+import threading
+
+
+class TwoLocks:
+    def __init__(self):
+        self._a = threading.Lock()
+        self._b = threading.Lock()
+        self.x = 0
+
+    def forward(self):
+        with self._a:
+            with self._b:
+                self.x += 1
+
+    def backward(self):
+        with self._b:
+            with self._a:
+                self.x -= 1

@@ -1,0 +1,20 @@
+"""Fixture twin: both methods honor one global a-before-b order
+(LCK002-clean)."""
+import threading
+
+
+class TwoLocks:
+    def __init__(self):
+        self._a = threading.Lock()
+        self._b = threading.Lock()
+        self.x = 0
+
+    def forward(self):
+        with self._a:
+            with self._b:
+                self.x += 1
+
+    def backward(self):
+        with self._a:
+            with self._b:
+                self.x -= 1

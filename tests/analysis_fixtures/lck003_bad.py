@@ -1,0 +1,8 @@
+"""Fixture: pin() result that can leak on an exception path (LCK003)."""
+
+
+def serve_once(store, batch):
+    entry = store.pin("default")
+    result = batch.run(entry)           # BAD: a raise here leaks the pin
+    store.release(entry)
+    return result

@@ -1,0 +1,15 @@
+"""Fixture twin: pin balanced by try/finally and by the context manager
+(LCK003-clean)."""
+
+
+def serve_once(store, batch):
+    entry = store.pin("default")
+    try:
+        return batch.run(entry)
+    finally:
+        store.release(entry)
+
+
+def serve_ctx(store, batch):
+    with store.pinned("default") as entry:
+        return batch.run(entry)

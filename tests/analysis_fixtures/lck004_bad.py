@@ -1,0 +1,15 @@
+"""Fixture: _REPROLINT_GUARDED_BY naming an attribute that no longer
+exists (LCK004 stale declaration)."""
+import threading
+
+
+class Renamed:
+    _REPROLINT_GUARDED_BY = {"_old_items": "_lock"}     # BAD: renamed away
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items = {}
+
+    def put(self, key, value):
+        with self._lock:
+            self._items[key] = value

@@ -1,0 +1,15 @@
+"""Fixture twin: the declaration matches the live attributes
+(LCK004-clean)."""
+import threading
+
+
+class Renamed:
+    _REPROLINT_GUARDED_BY = {"_items": "_lock"}
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items = {}
+
+    def put(self, key, value):
+        with self._lock:
+            self._items[key] = value

@@ -1,0 +1,29 @@
+"""Fixture: kernel staging whole operands far past the VMEM budget
+(PLK001). The launch-capture spy never executes the body, so the declared
+shapes can be huge without cost."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def double_all(x):
+    n, d = x.shape
+    # BAD: whole-array blocks — both operands staged entirely per grid cell
+    return pl.pallas_call(
+        _kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((n, d), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((n, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=True)(x)
+
+
+def REPROLINT_SPECS():
+    def launch():
+        double_all(jnp.zeros((1 << 16, 128), jnp.float32))  # 32 MB each way
+
+    return [{"name": "plk001-bad@whole-array", "call": launch}]

@@ -1,0 +1,28 @@
+"""Fixture twin: the same op tiled into VMEM-sized blocks (PLK001-clean)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BLOCK = 256
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def double_all(x):
+    n, d = x.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // _BLOCK,),
+        in_specs=[pl.BlockSpec((_BLOCK, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((_BLOCK, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=True)(x)
+
+
+def REPROLINT_SPECS():
+    def launch():
+        double_all(jnp.zeros((1 << 16, 128), jnp.float32))
+
+    return [{"name": "plk001-good@tiled", "call": launch}]

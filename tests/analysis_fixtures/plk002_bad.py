@@ -1,0 +1,32 @@
+"""Fixture: every parallel grid cell writes output block 0 (PLK002 race)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels._compat import compiler_params
+
+_BLOCK = 8
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].sum(axis=0, keepdims=True)
+
+
+def reduce_rows(x):
+    n = x.shape[0]
+    # BAD: all cells map output block 0 but the grid axis is "parallel"
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // _BLOCK,),
+        in_specs=[pl.BlockSpec((_BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        compiler_params=compiler_params(dimension_semantics=("parallel",)),
+        interpret=True)(x)
+
+
+def REPROLINT_SPECS():
+    def launch():
+        reduce_rows(jnp.zeros((64,), jnp.float32))
+
+    return [{"name": "plk002-bad@parallel-accumulator", "call": launch}]

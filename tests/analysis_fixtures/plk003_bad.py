@@ -1,0 +1,16 @@
+"""Fixture: unclamped dynamic indexing inside a kernel body (PLK003)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, idx_ref, start_ref, o_ref):
+    gathered = jnp.take(x_ref[...], idx_ref[...])          # BAD: no clip
+    window = x_ref[pl.ds(start_ref[0], 8)]                 # BAD: raw start
+    o_ref[...] = gathered[:8] + window
+
+
+def gather_window(x, idx, start):
+    return pl.pallas_call(
+        _kernel, out_shape=jax.ShapeDtypeStruct((8,), jnp.float32),
+        interpret=True)(x, idx, start)

@@ -1,0 +1,18 @@
+"""Fixture twin: every dynamic access visibly clamped (PLK003-clean)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, idx_ref, start_ref, o_ref):
+    gathered = jnp.take(x_ref[...], idx_ref[...], mode="clip")
+    # the clamp must be visible AT the pl.ds site (the pass does no
+    # dataflow — the repo kernels inline it the same way)
+    window = x_ref[pl.ds(jnp.minimum(start_ref[0], x_ref.shape[0] - 8), 8)]
+    o_ref[...] = gathered[:8] + window
+
+
+def gather_window(x, idx, start):
+    return pl.pallas_call(
+        _kernel, out_shape=jax.ShapeDtypeStruct((8,), jnp.float32),
+        interpret=True)(x, idx, start)

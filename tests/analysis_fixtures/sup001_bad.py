@@ -1,0 +1,14 @@
+"""Fixture: a disable directive with no justification (SUP001)."""
+import threading
+
+
+class Counter:
+    _REPROLINT_GUARDED_BY = {"n": "_lock"}
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.n = 0
+
+    def bump(self):
+        # reprolint: disable=LCK001
+        self.n += 1

@@ -1,0 +1,15 @@
+"""Fixture twin: the disable carries its required justification
+(SUP001-clean; the LCK001 underneath comes back suppressed)."""
+import threading
+
+
+class Counter:
+    _REPROLINT_GUARDED_BY = {"n": "_lock"}
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.n = 0
+
+    def bump(self):
+        # reprolint: disable=LCK001 -- single-threaded until start() is called
+        self.n += 1

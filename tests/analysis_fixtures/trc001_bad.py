@@ -1,0 +1,10 @@
+"""Fixture: Python control flow on a tracer argument (TRC001)."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def clamp_positive(x):
+    if x.sum() > 0:                     # BAD: tracer truthiness
+        return x
+    return jnp.zeros_like(x)

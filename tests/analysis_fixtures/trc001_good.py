@@ -1,0 +1,15 @@
+"""Fixture twin: static facts and lax.cond only (TRC001-clean)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("flip",))
+def clamp_positive(x, flip=False):
+    if flip:                            # static argument: fine
+        x = -x
+    if x.ndim == 1:                     # shape facts are static: fine
+        x = x[None, :]
+    return jax.lax.cond(x.sum() > 0, lambda v: v,
+                        lambda v: jnp.zeros_like(v), x)

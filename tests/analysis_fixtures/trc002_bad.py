@@ -1,0 +1,16 @@
+"""Fixture: pallas kernel capturing an array constant (TRC002)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_WEIGHTS = jnp.array([1.0, 2.0, 4.0, 8.0])       # module-level array const
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * _WEIGHTS           # BAD: captured device array
+
+
+def weighted(x):
+    return pl.pallas_call(
+        _kernel, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True)(x)

@@ -1,0 +1,20 @@
+"""Fixture twin: the constant rides in as an explicit operand
+(TRC002-clean)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_WEIGHTS = jnp.array([1.0, 2.0, 4.0, 8.0])
+
+
+def _kernel(x_ref, w_ref, o_ref, *, scale):
+    o_ref[...] = x_ref[...] * w_ref[...] * scale
+
+
+def weighted(x):
+    kernel = functools.partial(_kernel, scale=2.0)   # static scalar: fine
+    return pl.pallas_call(
+        kernel, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True)(x, _WEIGHTS)

@@ -1,0 +1,14 @@
+"""Fixture: host sync under a serving lock (TRC003)."""
+import threading
+
+import numpy as np
+
+
+class Server:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._results = {}
+
+    def serve(self, rid, device_array):
+        with self._lock:
+            self._results[rid] = np.asarray(device_array)   # BAD: sync held

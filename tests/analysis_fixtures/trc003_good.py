@@ -1,0 +1,15 @@
+"""Fixture twin: sync outside, bookkeeping inside (TRC003-clean)."""
+import threading
+
+import numpy as np
+
+
+class Server:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._results = {}
+
+    def serve(self, rid, device_array):
+        host = np.asarray(device_array)     # sync first, no lock held
+        with self._lock:
+            self._results[rid] = host

@@ -1,0 +1,23 @@
+"""Fixture: cached executable closing over a value missing from its cache
+key (TRC004)."""
+import jax
+
+
+class MiniEngine:
+    def __init__(self):
+        self._cache = {}
+
+    def _cached(self, key, make):
+        if key not in self._cache:
+            self._cache[key] = make()
+        return self._cache[key]
+
+    def exec_fill(self, batch, capacity):
+        key = ("fill", batch.shape)          # BAD: capacity not in the key
+
+        def make():
+            def body(values):
+                return values[:, :capacity]
+            return jax.jit(body)
+
+        return self._cached(key, make)(batch)

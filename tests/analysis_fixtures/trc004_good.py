@@ -1,0 +1,23 @@
+"""Fixture twin: every closed-over value appears in the cache key
+(TRC004-clean)."""
+import jax
+
+
+class MiniEngine:
+    def __init__(self):
+        self._cache = {}
+
+    def _cached(self, key, make):
+        if key not in self._cache:
+            self._cache[key] = make()
+        return self._cache[key]
+
+    def exec_fill(self, batch, capacity):
+        key = ("fill", batch.shape, capacity)
+
+        def make():
+            def body(values):
+                return values[:, :capacity]
+            return jax.jit(body)
+
+        return self._cached(key, make)(batch)

@@ -236,3 +236,76 @@ def test_bvh_query_results_path_independent(force):
     da = bvh.query(knn).distances
     db = ref_bvh.query(knn).distances
     assert np.allclose(np.asarray(da), np.asarray(db), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# executable-cache / stats atomicity (ISSUE 8 satellite)
+# ---------------------------------------------------------------------------
+
+def test_counters_and_lru_exact_under_two_threads():
+    """jit_traces and the cache hit/miss/LRU bookkeeping are guarded by
+    _cache_lock: two threads hammering the same engine must land EXACT
+    totals (an unlocked `+=` loses increments under interleaving) and the
+    LRU must hold exactly max_executables entries."""
+    import threading
+
+    eng = QueryEngine(EngineConfig(max_executables=4))
+    keys = [("k", i) for i in range(16)]
+    rounds = 500
+    barrier = threading.Barrier(2)
+
+    def hammer():
+        barrier.wait()
+        for r in range(rounds):
+            eng._note_trace()
+            key = keys[r % len(keys)]
+            fn, _ = eng._cached(key, lambda key=key: ("exe", key))
+            assert fn == ("exe", key)
+
+    ts = [threading.Thread(target=hammer) for _ in range(2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(120)
+
+    s = eng.stats.snapshot()
+    assert s.jit_traces == 2 * rounds                 # exact, no lost updates
+    assert s.cache_hits + s.cache_misses == 2 * rounds
+    # 16 keys cycling through a 4-slot LRU: every lookup re-compiles, but
+    # the count is exact either way and the LRU bound holds
+    assert len(eng._executables) == 4
+    assert s.cache_misses >= 16
+
+
+def test_warm_dispatch_counts_exact_across_threads():
+    """End-to-end: after a warmup dispatch, concurrent exec_knn calls from
+    two threads are all cache hits and never retrace."""
+    import threading
+
+    pts = _pts(64, 3, seed=5)
+    bvh = BVH(G.Points(pts))
+    eng = bvh.policy.engine if bvh.policy.engine else QueryEngine()
+    preds = P.nearest(G.Points(_pts(8, 3, seed=6)), k=2)
+    eng.exec_knn(bvh, preds)                          # warm: 1 miss, 1 trace
+    base = eng.stats.snapshot()
+    assert base.cache_misses >= 1 and base.jit_traces >= 1
+
+    per_thread = 16
+    barrier = threading.Barrier(2)
+
+    def serve():
+        barrier.wait()
+        for _ in range(per_thread):
+            (d, i), info = eng.exec_knn(bvh, preds)
+            assert info.cache_hit
+
+    ts = [threading.Thread(target=serve) for _ in range(2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(300)
+
+    s = eng.stats.snapshot()
+    assert s.cache_hits == base.cache_hits + 2 * per_thread
+    assert s.cache_misses == base.cache_misses        # nothing recompiled
+    assert s.jit_traces == base.jit_traces            # nothing retraced

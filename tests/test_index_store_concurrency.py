@@ -127,3 +127,108 @@ def test_hammered_swaps_never_tear_and_pins_survive():
     assert store.get("pts").version == 26
     # all pins released: history trimmed back to keep_versions
     assert len(store._history["pts"]) == 1
+
+
+def test_pinned_context_manager_balances_on_exception():
+    base = np.zeros((N, DIM), np.float32)
+    store = IndexStore(keep_versions=1)
+    store.build("pts", _cloud(base, 0))
+    with pytest.raises(RuntimeError):
+        with store.pinned("pts") as entry:
+            assert entry.version == 1
+            raise RuntimeError("dispatch blew up")
+    assert store._pins == {}                    # released on the raise path
+    store.update("pts", _cloud(base, 1))
+    with pytest.raises(KeyError):               # nothing held v1 alive
+        store.get("pts", 1)
+
+
+def test_gated_trim_interleaving_leaks_no_pins():
+    """Deterministic scheduler/maintenance interleaving around pin/release
+    during history trimming (ISSUE 8 satellite): the exact sequence is
+    forced with events, not sleeps —
+
+        scheduler: pin(v1) ........................ use ... release
+        maintenance:            swap v2, v3, v4 (each trims)
+
+    The pinned version must stay resolvable and untorn through every
+    trim, the release must evict it, and the pin table must end empty."""
+    base = np.random.default_rng(7).uniform(0, 1, (N, DIM)).astype(np.float32)
+    store = IndexStore(keep_versions=1)
+    store.build("pts", _cloud(base, 0))
+
+    pinned = threading.Event()      # scheduler -> maintenance: pin taken
+    swapped = threading.Event()     # maintenance -> scheduler: trims done
+    errors = []
+
+    def scheduler():
+        try:
+            with store.pinned("pts") as entry:
+                assert entry.version == 1
+                pinned.set()
+                assert swapped.wait(60), "maintenance never swapped"
+                # three trims ran while we were pinned (keep_versions=1):
+                # our version must still resolve and must not be torn
+                assert store.get("pts", 1) is entry
+                coords = np.asarray(entry.bvh.values.coords)
+                assert np.array_equal(coords, base + np.float32(0))
+        except Exception as err:
+            errors.append(err)
+
+    def maintenance():
+        try:
+            assert pinned.wait(60), "scheduler never pinned"
+            for tag in (1, 2, 3):
+                store.update("pts", _cloud(base, tag))
+            # the ring holds live v4 plus the pinned v1, nothing else
+            assert sorted(store._history["pts"]) == [1, 4]
+            swapped.set()
+        except Exception as err:
+            errors.append(err)
+            swapped.set()           # unblock the scheduler on failure
+
+    ts = [threading.Thread(target=scheduler),
+          threading.Thread(target=maintenance)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(120)
+    assert not errors, errors
+    assert store._pins == {}                        # no leaked pins
+    with pytest.raises(KeyError):                   # use-after-evict fenced
+        store.get("pts", 1)
+    assert sorted(store._history["pts"]) == [4]
+
+
+def test_query_server_dispatch_pins_against_concurrent_eviction(monkeypatch):
+    """Regression for QueryServer._dispatch: it used to get() the live
+    version unpinned, so maintenance swaps DURING a dispatch could trim
+    the batch's version out of the registry. Now it pins: updates racing
+    the dispatch must leave the in-flight version resolvable, and the pin
+    must be gone once handle() returns."""
+    from repro.service import QueryServer, knn_request
+    from repro.service import server as SRV
+
+    base = np.random.default_rng(9).uniform(0, 1, (N, DIM)).astype(np.float32)
+    store = IndexStore(keep_versions=1)
+    srv = QueryServer(store=store)
+    srv.create_index("pts", _cloud(base, 0))
+
+    real = SRV.execute_group
+    observed = {}
+
+    def racing_execute(engine, config, entry, group):
+        for tag in (1, 2, 3):                   # maintenance mid-dispatch
+            store.update("pts", _cloud(base, tag))
+        observed["resolvable"] = store.get("pts", entry.version) is entry
+        observed["version"] = entry.version
+        return real(engine, config, entry, group)
+
+    monkeypatch.setattr(SRV, "execute_group", racing_execute)
+    q = np.zeros((4, DIM), np.float32)
+    (resp,) = srv.handle([knn_request(q, 2, "pts")])
+    assert observed == {"resolvable": True, "version": 1}
+    assert resp.stats.index_version == 1        # served on the pinned snapshot
+    assert store._pins == {}                    # balanced after handle()
+    with pytest.raises(KeyError):               # released -> evicted
+        store.get("pts", 1)
