@@ -6,16 +6,22 @@ import time
 
 import jax
 
+from repro.telemetry import tracer as TEL
 
-def timeit(fn, *args, warmup: int = 1, iters: int = 3, **kw):
-    """Best-of-iters wall time in microseconds (after jit warmup)."""
+
+def timeit(fn, *args, label: str = "bench.timeit", warmup: int = 1,
+           iters: int = 3, **kw):
+    """Best-of-iters wall time in microseconds (after jit warmup). Each
+    measurement run is a device-fenced ``bench.measure`` telemetry span
+    (already block_until_ready-bounded, so the fence is free here)."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args, **kw))
     best = float("inf")
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args, **kw))
-        best = min(best, time.perf_counter() - t0)
+    for i in range(iters):
+        with TEL.span("bench.measure", label=label, iter=i):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args, **kw))
+            best = min(best, time.perf_counter() - t0)
     return best * 1e6
 
 

@@ -70,37 +70,44 @@ def _spatial_preds(q, seed=2):
 def _t_spatial_pallas(tree, preds, cap, bq):
     q_lo, q_hi, r = _spatial_rep(preds)
     return timeit(lambda: _pallas_spatial_call(
-        tree, q_lo, q_hi, r, capacity=cap, fine_sqrt=True, bq=bq))
+        tree, q_lo, q_hi, r, capacity=cap, fine_sqrt=True, bq=bq),
+        label="autotune.spatial.pallas")
 
 
 def _t_spatial_loop(tree, values, preds, cap):
     cb, s0 = CB.collect_hits(cap)
     s0 = _bcast_state(s0, len(preds))
-    return timeit(lambda: T.traverse(tree, values, preds, cb, s0))
+    return timeit(lambda: T.traverse(tree, values, preds, cb, s0),
+                  label="autotune.spatial.loop")
 
 
 def _t_spatial_bf(values, preds, cap):
     bf = BruteForce(values)
-    return timeit(lambda: bf._fill_impl(preds, cap, bf.policy))
+    return timeit(lambda: bf._fill_impl(preds, cap, bf.policy),
+                  label="autotune.spatial.bf")
 
 
 def _t_knn_pallas(tree, qc, k, bq):
-    return timeit(lambda: _pallas_knn_call(tree, qc, k=k, bq=bq))
+    return timeit(lambda: _pallas_knn_call(tree, qc, k=k, bq=bq),
+                  label="autotune.knn.pallas")
 
 
 def _t_knn_loop(tree, values, preds, k):
-    return timeit(lambda: T.traverse_knn(tree, values, preds, k))
+    return timeit(lambda: T.traverse_knn(tree, values, preds, k),
+                  label="autotune.knn.loop")
 
 
 def _t_callback(tree, values, preds, bq=None):
     cb, s0 = CB.counting()
     s0 = _bcast_state(s0, len(preds))
     if bq is None:
-        return timeit(lambda: T.traverse(tree, values, preds, cb, s0))
+        return timeit(lambda: T.traverse(tree, values, preds, cb, s0),
+                      label="autotune.callback.loop")
     from repro.kernels.bvh_callback import bvh_traverse_callback
     return timeit(lambda: bvh_traverse_callback(
         tree.node_lo, tree.node_hi, tree.rope, tree.left_child,
-        tree.range_last, tree.leaf_perm, values, preds, cb, s0, bq=bq))
+        tree.range_last, tree.leaf_perm, values, preds, cb, s0, bq=bq),
+        label="autotune.callback.pallas")
 
 
 def _pow2_at_least(x: int) -> int:
@@ -118,8 +125,10 @@ def tune(quick: bool = False) -> RouteTable:
     # --- build engine: fused kernels vs reference pipeline ----------------
     pts = _cloud(n_big, 3)
     boxes = G.Boxes(pts, pts)
-    t_ref = timeit(lambda: build(boxes, engine="ref"))
-    t_pal = timeit(lambda: build(boxes, engine="pallas"))
+    t_ref = timeit(lambda: build(boxes, engine="ref"),
+                   label="autotune.build.ref")
+    t_pal = timeit(lambda: build(boxes, engine="pallas"),
+                   label="autotune.build.pallas")
     build_engine = "pallas" if t_pal <= t_ref else "ref"
     meas["build"] = {"n": n_big, "ref_us": t_ref, "pallas_us": t_pal}
     log(f"build n={n_big}: ref {t_ref/1e3:.1f}ms pallas {t_pal/1e3:.1f}ms "

@@ -14,19 +14,29 @@ via the atomic swap; the serving loop only ever pins).
 (``scripts/tier1.sh``) so the async path is exercised on every run.
 """
 import argparse
+import json
+import os
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.core import geometry as G
 from repro.service import (PipelineConfig, ServiceConfig, ServingPipeline,
                            knn_request, ray_request, within_request)
+from repro.service.pipeline import REQUEST_PHASES
 
 from ._util import row
 
 MERGE_INTO = "service"      # run.py: merge into BENCH_service.json ...
 MERGE_KEY = "pipeline"      # ... under this key
+
+#: Chrome trace of the whole load run (Perfetto-loadable; README
+#: "Observability" walks through opening it)
+TRACE_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "TRACE_pipeline.json")
 
 FULL = dict(n_points=20_000, n_requests=200, rate_hz=25.0,
             deadline_us=150_000.0, update_every=40, max_m=24,
@@ -42,8 +52,54 @@ def _pct(arr, q):
     return float(np.percentile(np.asarray(arr), q)) if len(arr) else 0.0
 
 
+def _phase_pcts(responses):
+    """Per-phase p50/p99/mean over a set of responses' phase tilings."""
+    out = {}
+    for ph in REQUEST_PHASES:
+        vals = [r.stats.phase_us[ph] for r in responses
+                if r.stats.phase_us is not None]
+        out[ph] = {"p50": _pct(vals, 50), "p99": _pct(vals, 99),
+                   "mean": float(np.mean(vals)) if vals else 0.0}
+    return out
+
+
+def _export_trace(tracer, responses, trace_path):
+    """Write the Chrome trace, re-parse it, and verify the acceptance
+    property: a sampled deadline-missed request's five phase spans sum to
+    within 5% of its recorded queue_wait_us + service_us."""
+    spans = tracer.drain()
+    telemetry.write_chrome_trace(
+        trace_path, spans, metadata={"benchmark": "bench_pipeline"})
+    with open(trace_path) as fh:
+        obj = json.load(fh)
+    problems = telemetry.validate_chrome_trace(obj)
+    if problems:
+        raise AssertionError(f"exported trace invalid: {problems[:3]}")
+    sample = next((r for r in responses if r.stats.deadline_missed),
+                  responses[0])
+    kids = [ev for ev in obj["traceEvents"] if ev.get("ph") == "X"
+            and ev["args"].get("parent_id") == sample.stats.span_id]
+    if len(kids) != len(REQUEST_PHASES):
+        raise AssertionError(
+            f"expected {len(REQUEST_PHASES)} phase spans under request "
+            f"span {sample.stats.span_id}, found {len(kids)}")
+    total = sum(ev["dur"] for ev in kids)
+    expect = sample.stats.queue_wait_us + sample.stats.service_us
+    if abs(total - expect) > 0.05 * expect:
+        raise AssertionError(
+            f"phase spans sum to {total:.1f}us but stats record "
+            f"{expect:.1f}us (>5% apart)")
+    return {
+        "path": os.path.basename(trace_path), "events": len(obj["traceEvents"]),
+        "sampled_span_id": sample.stats.span_id,
+        "sampled_deadline_missed": bool(sample.stats.deadline_missed),
+        "sampled_phase_sum_us": total, "sampled_recorded_us": expect,
+    }
+
+
 def generate_load(*, n_points, n_requests, rate_hz, deadline_us,
-                  update_every, max_m, max_bucket, k, seed):
+                  update_every, max_m, max_bucket, k, seed,
+                  trace_path=TRACE_PATH):
     """One seeded run; returns the metrics dict recorded in BENCH_service."""
     rng = np.random.default_rng(seed)
     cfg = PipelineConfig(service=ServiceConfig(
@@ -52,39 +108,49 @@ def generate_load(*, n_points, n_requests, rate_hz, deadline_us,
     kinds = [m[0] for m in MIX]
     probs = [m[1] for m in MIX]
 
-    with ServingPipeline(config=cfg) as pipe:
-        pipe.create_index("default", G.Points(jnp.asarray(pts)))
-        pipe.warmup("default", [("knn", k), ("within", 0), ("ray", 1)])
+    was_enabled = telemetry.enabled()
+    tracer = telemetry.enable(capacity=65536)
+    try:
+        with ServingPipeline(config=cfg) as pipe:
+            pipe.create_index("default", G.Points(jnp.asarray(pts)))
+            pipe.warmup("default", [("knn", k), ("within", 0), ("ray", 1)])
 
-        tickets, updates = [], 0
-        t0 = time.perf_counter()
-        next_arrival = t0
-        for i in range(n_requests):
-            next_arrival += rng.exponential(1.0 / rate_hz)
-            delay = next_arrival - time.perf_counter()
-            if delay > 0:
-                time.sleep(delay)
-            m = int(rng.integers(1, max_m + 1))
-            q = rng.uniform(0, 1, (m, 3)).astype(np.float32)
-            kind = rng.choice(kinds, p=probs)
-            if kind == "knn":
-                req = knn_request(q, k=k)
-            elif kind == "within":
-                req = within_request(q, 0.05)
-            else:
-                req = ray_request(q, rng.normal(size=(m, 3)).astype(
-                    np.float32), k=1)
-            tickets.append(pipe.submit(req, deadline_us=deadline_us))
-            if update_every and (i + 1) % update_every == 0:
-                drift = pts + rng.normal(0, 0.01, pts.shape).astype(np.float32)
-                pipe.update_index("default", G.Points(jnp.asarray(drift)))
-                updates += 1
+            tickets, updates = [], 0
+            t0 = time.perf_counter()
+            next_arrival = t0
+            for i in range(n_requests):
+                next_arrival += rng.exponential(1.0 / rate_hz)
+                delay = next_arrival - time.perf_counter()
+                if delay > 0:
+                    time.sleep(delay)
+                m = int(rng.integers(1, max_m + 1))
+                q = rng.uniform(0, 1, (m, 3)).astype(np.float32)
+                kind = rng.choice(kinds, p=probs)
+                if kind == "knn":
+                    req = knn_request(q, k=k)
+                elif kind == "within":
+                    req = within_request(q, 0.05)
+                else:
+                    req = ray_request(q, rng.normal(size=(m, 3)).astype(
+                        np.float32), k=1)
+                tickets.append(pipe.submit(req, deadline_us=deadline_us))
+                if update_every and (i + 1) % update_every == 0:
+                    drift = pts + rng.normal(0, 0.01, pts.shape).astype(
+                        np.float32)
+                    pipe.update_index("default", G.Points(jnp.asarray(drift)))
+                    updates += 1
 
-        responses = [t.result(timeout=120.0) for t in tickets]
-        wall = time.perf_counter() - t0
-        assert pipe.wait_maintenance_idle(120.0)
-        st = pipe.stats()
+            responses = [t.result(timeout=120.0) for t in tickets]
+            wall = time.perf_counter() - t0
+            assert pipe.wait_maintenance_idle(120.0)
+            st = pipe.stats()
+        trace = _export_trace(tracer, responses, trace_path) \
+            if trace_path else None
+    finally:
+        if not was_enabled:
+            telemetry.disable()
 
+    missed = [r for r in responses if r.stats.deadline_missed]
     total_us = [r.stats.queue_wait_us + r.stats.service_us for r in responses]
     waits = [r.stats.queue_wait_us for r in responses]
     rows = sum(len(t.request.a) for t in tickets)
@@ -98,6 +164,13 @@ def generate_load(*, n_points, n_requests, rate_hz, deadline_us,
                        "p99": _pct(total_us, 99),
                        "max": float(np.max(total_us))},
         "queue_wait_us": {"p50": _pct(waits, 50), "p99": _pct(waits, 99)},
+        # phase-attributed breakdown: where the time went, for the whole
+        # run AND for the deadline-missed requests specifically — "which
+        # phase caused that p99 miss" is the question this answers
+        "phase_us": _phase_pcts(responses),
+        "missed_phase_us": _phase_pcts(missed),
+        "missed_count": len(missed),
+        "trace": trace,
         "deadline_miss_rate": st.miss_rate,
         "deadline_missed": st.deadline_missed,
         "batches": st.batches,
@@ -125,6 +198,11 @@ def main(smoke: bool = False):
         derived=f"miss_rate={out['deadline_miss_rate']:.3f}")
     row("pipeline_throughput_rps", out["throughput_rps"],
         derived=f"occupancy={out['batch_occupancy']:.2f}")
+    if out["missed_count"]:
+        mp = out["missed_phase_us"]
+        worst = max(REQUEST_PHASES, key=lambda p: mp[p]["p99"])
+        row("pipeline_missed_worst_phase_p99", mp[worst]["p99"],
+            derived=f"phase={worst},missed={out['missed_count']}")
     return out
 
 

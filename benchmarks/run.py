@@ -13,6 +13,7 @@ import os
 import sys
 import traceback
 
+from repro import telemetry
 from repro.core.route_table import hardware_fingerprint
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -41,12 +42,17 @@ def main():
     only = sys.argv[1:] or None
     print("name,us_per_call,derived")
     failed = []
+    # telemetry on for the whole sweep; drained per module so each
+    # BENCH_*.json carries a span summary of the run that produced it
+    telemetry.enable(capacity=65536)
     for name in MODULES:
         if only and name not in only:
             continue
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
+            telemetry.get_tracer().drain()      # spans of THIS module only
             out = mod.main()
+            spans = telemetry.get_tracer().drain()
             if isinstance(out, dict):
                 # a module may target another module's JSON (MERGE_INTO):
                 # bench_pipeline folds its metrics into BENCH_service.json
@@ -65,10 +71,16 @@ def main():
                     data[key] = out
                 else:
                     # keep sections owned by merge modules (a bench_service-
-                    # only run must not drop the pipeline metrics)
+                    # only run must not drop the pipeline metrics) and the
+                    # telemetry section other modules contributed to
                     data = {k: v for k, v in old.items()
-                            if k in PRESERVE.get(suffix, ())}
+                            if k in PRESERVE.get(suffix, ())
+                            or k == "telemetry"}
                     data.update(out)
+                # every BENCH_*.json gains a telemetry section: span
+                # summaries keyed by the module whose run produced them
+                data.setdefault("telemetry", {})[name] = \
+                    telemetry.summarize_spans(spans)
                 # every persisted payload records WHERE it was measured —
                 # latencies without a hardware fingerprint are
                 # unattributable (previously only implied by the checkout)

@@ -15,10 +15,16 @@ fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-# reprolint (DESIGN.md §9): lock discipline + tracer hygiene + the
-# launch-capture kernel sanitizer. A hard gate — exit 1 on any live
-# finding, exit 2 if the analyzer itself breaks; both fail tier-1.
+# reprolint (DESIGN.md §9): lock discipline + tracer hygiene + span
+# hygiene (TEL001) + the launch-capture kernel sanitizer. A hard gate —
+# exit 1 on any live finding, exit 2 if the analyzer itself breaks; both
+# fail tier-1.
 python -m repro.analysis --strict
+
+# telemetry export round-trip (DESIGN.md §10): emit spans + metrics in
+# process, write Chrome-trace JSON + JSONL, parse both back, validate
+# the schemas, render the report tables.
+python -m repro.telemetry.report --selftest
 
 # runtime kernel contracts: interpret-mode re-execution of all four
 # Pallas kernel modules with REPRO_SANITIZE assertions armed, vs

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import os
 
-from . import locks, pallas_static, tracer
+from . import locks, pallas_static, telemetry_lint, tracer
 from .astutil import SourceFile, load
 from .findings import RULES, Finding, apply_suppressions
 
@@ -70,6 +70,7 @@ def analyze(paths=None, *, strict: bool = False,
     findings += locks.run(files)
     findings += tracer.run(files)
     findings += pallas_static.run(files)
+    findings += telemetry_lint.run(files)
     if strict:
         from . import pallas_trace
         findings += pallas_trace.run(

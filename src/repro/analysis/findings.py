@@ -40,6 +40,8 @@ RULES = {
               "(index_map is not race-free)",
     "PLK003": "unclamped dynamic indexing inside a pallas kernel (gather "
               "needs mode='clip'; pl.ds needs a clipped start)",
+    "TEL001": "telemetry span opened without a guaranteed close on "
+              "exception paths (use `with span(...)` or try/finally)",
     "SUP001": "reprolint disable comment without a justification "
               "(use: # reprolint: disable=RULE -- why)",
 }

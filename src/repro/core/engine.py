@@ -36,13 +36,14 @@ import jax.numpy as jnp
 
 from ..kernels.bvh_callback import bvh_traverse_callback
 from ..kernels.bvh_traverse import bvh_traverse_knn, bvh_traverse_spatial
+from ..telemetry import tracer as TEL
 from . import geometry as G
 from . import predicates as P
 from . import route_table as RT
 
-__all__ = ["EngineConfig", "EngineStats", "ExecInfo", "QueryEngine",
-           "default_engine", "set_default_engine", "ROUTE_BRUTEFORCE",
-           "ROUTE_PALLAS", "ROUTE_LOOP"]
+__all__ = ["EngineConfig", "EngineStats", "EngineStatsSnapshot", "ExecInfo",
+           "QueryEngine", "default_engine", "set_default_engine",
+           "ROUTE_BRUTEFORCE", "ROUTE_PALLAS", "ROUTE_LOOP"]
 
 ROUTE_BRUTEFORCE = "bruteforce"
 ROUTE_PALLAS = "pallas"
@@ -179,28 +180,92 @@ def _spatial_rep(predicates):
     return None
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
+class EngineStatsSnapshot:
+    """Immutable point-in-time copy of :class:`EngineStats`."""
+    cache_hits: int = 0
+    cache_misses: int = 0
+    jit_traces: int = 0
+
+    def snapshot(self) -> "EngineStatsSnapshot":
+        return self
+
+
+def _counter_prop(field: str, doc: str) -> property:
+    """Registry-backed compatibility field: reads go to the counter's
+    value, writes (the legacy ``stats.x += 1`` spelling, always under the
+    caller's stats lock) go to ``Counter.set``."""
+    def _get(self):
+        return self._counters[field].value
+
+    def _set(self, v):
+        self._counters[field].set(v)
+
+    return property(_get, _set, doc=doc)
+
+
 class EngineStats:
-    """Executable-cache accounting (DESIGN.md §5).
+    """Executable-cache accounting (DESIGN.md §5, §10).
 
     cache_hits/misses count lookups of the per-(route, op, bucket shape)
     executable cache; jit_traces counts ACTUAL retraces — each cached body
     bumps it from inside the traced Python, so it moves only when XLA
     recompiles. A warm service shows hits growing and misses/traces flat.
-    """
-    cache_hits: int = 0
-    cache_misses: int = 0
-    jit_traces: int = 0
 
-    def snapshot(self) -> "EngineStats":
-        return dataclasses.replace(self)
+    Since ISSUE 9 the fields are views over counters in a per-instance
+    telemetry :class:`~repro.telemetry.MetricsRegistry` (``.registry``),
+    so the same numbers flow into the JSONL metrics export. Field reads
+    and writes keep their old meaning; constructing with field keyword
+    arguments still seeds the counters but warns once (DeprecationWarning
+    — the values now also land in the registry).
+    """
+
+    _FIELDS = ("cache_hits", "cache_misses", "jit_traces")
+
+    cache_hits = _counter_prop("cache_hits", "executable-cache hits")
+    cache_misses = _counter_prop("cache_misses", "executable-cache misses")
+    jit_traces = _counter_prop("jit_traces", "actual XLA retraces")
+
+    def __init__(self, registry=None, **legacy):
+        from ..telemetry import MetricsRegistry
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._counters = {f: self.registry.counter(f"engine.{f}")
+                          for f in self._FIELDS}
+        if legacy:
+            unknown = sorted(set(legacy) - set(self._FIELDS))
+            if unknown:
+                raise TypeError(f"EngineStats got unexpected fields {unknown}")
+            from .index import _warn_deprecated
+            _warn_deprecated(
+                "EngineStats.kwargs",
+                "constructing EngineStats with field keyword arguments is "
+                "deprecated: the fields are now counters in a telemetry "
+                "MetricsRegistry (stats.registry); assign fields or use "
+                "registry.counter(...) instead")
+            for k, v in legacy.items():
+                self._counters[k].set(int(v))
+
+    def snapshot(self) -> EngineStatsSnapshot:
+        return EngineStatsSnapshot(
+            **{f: self._counters[f].value for f in self._FIELDS})
+
+    def __repr__(self):
+        body = ", ".join(f"{f}={self._counters[f].value}"
+                         for f in self._FIELDS)
+        return f"EngineStats({body})"
 
 
 @dataclasses.dataclass(frozen=True)
 class ExecInfo:
-    """Per-dispatch metadata returned by the exec_* entry points."""
+    """Per-dispatch metadata returned by the exec_* entry points.
+
+    kernel_us is the device-fenced duration of the executable call (the
+    ``engine.kernel`` telemetry span) — 0.0 when telemetry is disabled,
+    because fencing would serialize XLA's async dispatch.
+    """
     route: str
     cache_hit: bool
+    kernel_us: float = 0.0
 
 
 class QueryEngine:
@@ -365,6 +430,21 @@ class QueryEngine:
         with self._cache_lock:
             self.stats.jit_traces += 1
 
+    def _launch(self, fn, args, *, route: str, op: str, hit: bool):
+        """Run a cached executable under an ``engine.kernel`` span and
+        return (result, kernel_us). With telemetry enabled the span is
+        device-fenced (block_until_ready), so kernel_us covers actual
+        device execution; disabled, this is one flag check and the
+        dispatch stays fully async (kernel_us = 0.0)."""
+        sp = TEL.span("engine.kernel", route=route, op=op, cache_hit=hit)
+        with sp:
+            out = sp.fence(fn(*args))
+        return out, sp.dur_us
+
+    def _route_span(self, op: str):
+        """Span around a route-table decision (wall clock, Python-only)."""
+        return TEL.span("engine.route", op=op)
+
     def _cached(self, key, make):
         # locked: concurrent server threads must not compile the same key
         # twice or lose stats increments (IndexStore promises this level of
@@ -400,7 +480,9 @@ class QueryEngine:
         Returns ((counts, idx_buf), ExecInfo): FULL per-query counts plus the
         first `capacity` matched original indices per query (-1 padded).
         """
-        route = self.route_spatial(bvh, predicates, capacity)
+        with self._route_span("spatial") as rsp:
+            route = self.route_spatial(bvh, predicates, capacity)
+            rsp.annotate(route=route)
         bq = self._rule("spatial", bvh, None).block_q
         # every value a traced body closes over is named IN the key —
         # reprolint TRC004 pins this (a closed-over value missing from the
@@ -422,7 +504,9 @@ class QueryEngine:
 
             fn, hit = self._cached(key, make)
             q_lo, q_hi, r = _spatial_rep(predicates)
-            return fn(bvh.tree, q_lo, q_hi, r), ExecInfo(route, hit)
+            out, kus = self._launch(fn, (bvh.tree, q_lo, q_hi, r),
+                                    route=route, op="spatial", hit=hit)
+            return out, ExecInfo(route, hit, kus)
 
         if route == ROUTE_BRUTEFORCE:
             def make():
@@ -434,7 +518,9 @@ class QueryEngine:
                 return jax.jit(body)
 
             fn, hit = self._cached(key, make)
-            return fn(bvh.values, predicates), ExecInfo(route, hit)
+            out, kus = self._launch(fn, (bvh.values, predicates),
+                                    route=route, op="spatial", hit=hit)
+            return out, ExecInfo(route, hit, kus)
 
         def make():
             def body(tree, values, preds):
@@ -449,11 +535,15 @@ class QueryEngine:
             return jax.jit(body)
 
         fn, hit = self._cached(key, make)
-        return fn(bvh.tree, bvh.values, predicates), ExecInfo(ROUTE_LOOP, hit)
+        out, kus = self._launch(fn, (bvh.tree, bvh.values, predicates),
+                                route=ROUTE_LOOP, op="spatial", hit=hit)
+        return out, ExecInfo(ROUTE_LOOP, hit, kus)
 
     def exec_knn(self, bvh, predicates):
         """Cached kNN for a Nearest bucket. Returns ((dists, idxs), ExecInfo)."""
-        route = self.route_knn(bvh, predicates)
+        with self._route_span("knn") as rsp:
+            route = self.route_knn(bvh, predicates)
+            rsp.annotate(route=route)
         k = predicates.k
         bq = self._rule("knn", bvh, None).block_q
         getter = bvh._getter
@@ -467,7 +557,9 @@ class QueryEngine:
                 return jax.jit(body)
 
             fn, hit = self._cached(key, make)
-            return fn(bvh.tree, G.centroid(predicates.geom)), ExecInfo(route, hit)
+            out, kus = self._launch(fn, (bvh.tree, G.centroid(predicates.geom)),
+                                    route=route, op="knn", hit=hit)
+            return out, ExecInfo(route, hit, kus)
 
         if route == ROUTE_BRUTEFORCE:
             def make():
@@ -479,7 +571,9 @@ class QueryEngine:
                 return jax.jit(body)
 
             fn, hit = self._cached(key, make)
-            return fn(bvh.values, predicates), ExecInfo(route, hit)
+            out, kus = self._launch(fn, (bvh.values, predicates),
+                                    route=route, op="knn", hit=hit)
+            return out, ExecInfo(route, hit, kus)
 
         def make():
             def body(tree, values, preds):
@@ -489,7 +583,9 @@ class QueryEngine:
             return jax.jit(body)
 
         fn, hit = self._cached(key, make)
-        return fn(bvh.tree, bvh.values, predicates), ExecInfo(ROUTE_LOOP, hit)
+        out, kus = self._launch(fn, (bvh.tree, bvh.values, predicates),
+                                route=ROUTE_LOOP, op="knn", hit=hit)
+        return out, ExecInfo(ROUTE_LOOP, hit, kus)
 
     def exec_ray_nearest(self, bvh, rays, k: int):
         """Cached first-k ray hits (always the general loop path).
@@ -505,7 +601,9 @@ class QueryEngine:
             return jax.jit(body)
 
         fn, hit = self._cached(key, make)
-        return fn(bvh.tree, bvh.values, rays), ExecInfo(ROUTE_LOOP, hit)
+        out, kus = self._launch(fn, (bvh.tree, bvh.values, rays),
+                                route=ROUTE_LOOP, op="ray_nearest", hit=hit)
+        return out, ExecInfo(ROUTE_LOOP, hit, kus)
 
 
 _DEFAULT = QueryEngine()

@@ -28,6 +28,7 @@ from ..core import lbvh
 from ..core.access import default_indexable_getter
 from ..core.bvh import BVH
 from ..core.index import ExecutionPolicy
+from ..telemetry import tracer as TEL
 
 __all__ = ["IndexStore", "IndexVersion"]
 
@@ -141,8 +142,9 @@ class IndexStore:
         if cur.bvh.tree is None or len(boxes) != cur.bvh.size():
             return self._publish(name, values, getter, action="rebuild")
 
-        new_tree = lbvh.refit(cur.bvh.tree, boxes)
-        sah = float(lbvh.sah_cost(new_tree))
+        with TEL.span("store.refit", index=name, n=cur.bvh.size()) as sp:
+            new_tree = sp.fence(lbvh.refit(cur.bvh.tree, boxes))
+            sah = float(lbvh.sah_cost(new_tree))
         if sah > self.rebuild_threshold * cur.sah_built:
             return self._publish(name, values, getter, action="rebuild")
 
@@ -154,9 +156,15 @@ class IndexStore:
 
     # -- internals ---------------------------------------------------------
     def _publish(self, name, values, getter, *, action) -> IndexVersion:
-        bvh = BVH(values, getter, policy=ExecutionPolicy(
-            engine=self.engine, build_engine=self.build_engine))
-        sah = float(lbvh.sah_cost(bvh.tree)) if bvh.tree is not None else 0.0
+        with TEL.span("store.build", index=name, action=action) as sp:
+            bvh = BVH(values, getter, policy=ExecutionPolicy(
+                engine=self.engine, build_engine=self.build_engine))
+            if bvh.tree is not None:
+                sp.fence(bvh.tree)
+                sah = float(lbvh.sah_cost(bvh.tree))
+            else:
+                sah = 0.0
+            sp.annotate(n=bvh.size())
         return self._swap(IndexVersion(
             name=name, version=0, bvh=bvh, action=action, sah=sah,
             sah_built=sah, refits_since_build=0))
@@ -164,7 +172,8 @@ class IndexStore:
     def _swap(self, entry: IndexVersion) -> IndexVersion:
         """The atomic publish: version assignment + one dict write, both
         under the lock (the slow build/refit already happened outside)."""
-        with self._lock:
+        with TEL.span("store.swap", index=entry.name,
+                      action=entry.action), self._lock:
             prev = self._live.get(entry.name)
             entry = dataclasses.replace(
                 entry, version=(prev.version + 1) if prev else 1)

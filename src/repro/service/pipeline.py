@@ -40,11 +40,18 @@ import time
 
 from ..core import engine as E
 from ..core.access import default_indexable_getter
+from ..telemetry import tracer as TEL
 from .batcher import Batcher, Request, bucket_size, validate_kind
 from .index_store import IndexStore, IndexVersion
 from .server import Response, ServiceConfig, execute_group
 
-__all__ = ["PipelineConfig", "PipelineStats", "Ticket", "ServingPipeline"]
+__all__ = ["PipelineConfig", "PipelineStats", "PipelineStatsSnapshot",
+           "Ticket", "ServingPipeline"]
+
+#: request phase names, in wall-clock order; the phases tile the request's
+#: lifetime exactly: submit+queue+batch = queue_wait_us and
+#: dispatch+kernel = service_us (DESIGN.md §10 span taxonomy)
+REQUEST_PHASES = ("submit", "queue", "batch", "dispatch", "kernel")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,16 +79,10 @@ class PipelineConfig:
     est_safety: float = 1.5
 
 
-@dataclasses.dataclass
-class PipelineStats:
-    """Pipeline-level counters (snapshot via ``ServingPipeline.stats()``).
-
-    Occupancy is ``batch_rows / batch_slots`` — how much of each dispatched
-    bucket carried real queries. ``stalled_behind_maintenance`` counts
-    dispatches that had to wait for an in-progress build/refit; the design
-    makes that impossible (maintenance publishes finished indexes via the
-    atomic swap), so the benchmark pins it at zero.
-    """
+@dataclasses.dataclass(frozen=True)
+class PipelineStatsSnapshot:
+    """Immutable point-in-time copy of :class:`PipelineStats` — what
+    ``ServingPipeline.stats()`` hands back."""
     submitted: int = 0
     served: int = 0
     failed: int = 0
@@ -109,8 +110,132 @@ class PipelineStats:
     def miss_rate(self) -> float:
         return self.deadline_missed / self.served if self.served else 0.0
 
-    def snapshot(self) -> "PipelineStats":
-        return dataclasses.replace(self)
+    def snapshot(self) -> "PipelineStatsSnapshot":
+        return self
+
+
+def _counter_prop(field: str) -> property:
+    def _get(self):
+        return self._counters[field].value
+
+    def _set(self, v):
+        self._counters[field].set(v)
+
+    return property(_get, _set)
+
+
+def _gauge_prop(field: str) -> property:
+    def _get(self):
+        return self._gauges[field].value
+
+    def _set(self, v):
+        self._gauges[field].set(v)
+
+    return property(_get, _set)
+
+
+class PipelineStats:
+    """Pipeline-level counters (snapshot via ``ServingPipeline.stats()``).
+
+    Occupancy is ``batch_rows / batch_slots`` — how much of each dispatched
+    bucket carried real queries. ``stalled_behind_maintenance`` counts
+    dispatches that had to wait for an in-progress build/refit; the design
+    makes that impossible (maintenance publishes finished indexes via the
+    atomic swap), so the benchmark pins it at zero.
+
+    Since ISSUE 9 the fields are views over a per-instance telemetry
+    :class:`~repro.telemetry.MetricsRegistry` (``.registry``), so they
+    flow into the JSONL metrics export for free. ``queue_depth`` is a
+    registry Gauge whose high-water mark updates atomically inside every
+    level change — ``max_queue_depth`` reads that mark, and assigning it
+    directly is a warn-once deprecation (the old read-modify-write
+    spelling could under-report a peak built by two racing threads).
+    """
+
+    _COUNTER_FIELDS = (
+        "submitted", "served", "failed", "deadline_missed", "batches",
+        "batch_rows", "batch_slots", "closed_full", "closed_deadline",
+        "closed_drain", "swap_count", "refits", "rebuilds",
+        "maintenance_errors", "stalled_behind_maintenance")
+    _GAUGE_FIELDS = ("queue_depth", "maintenance_pending")
+    _FIELDS = tuple(f.name for f in
+                    dataclasses.fields(PipelineStatsSnapshot))
+
+    submitted = _counter_prop("submitted")
+    served = _counter_prop("served")
+    failed = _counter_prop("failed")
+    deadline_missed = _counter_prop("deadline_missed")
+    batches = _counter_prop("batches")
+    batch_rows = _counter_prop("batch_rows")
+    batch_slots = _counter_prop("batch_slots")
+    closed_full = _counter_prop("closed_full")
+    closed_deadline = _counter_prop("closed_deadline")
+    closed_drain = _counter_prop("closed_drain")
+    swap_count = _counter_prop("swap_count")
+    refits = _counter_prop("refits")
+    rebuilds = _counter_prop("rebuilds")
+    maintenance_errors = _counter_prop("maintenance_errors")
+    stalled_behind_maintenance = _counter_prop("stalled_behind_maintenance")
+    queue_depth = _gauge_prop("queue_depth")
+    maintenance_pending = _gauge_prop("maintenance_pending")
+
+    def __init__(self, registry=None, **legacy):
+        from ..telemetry import MetricsRegistry
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._counters = {f: self.registry.counter(f"pipeline.{f}")
+                          for f in self._COUNTER_FIELDS}
+        self._gauges = {f: self.registry.gauge(f"pipeline.{f}")
+                        for f in self._GAUGE_FIELDS}
+        if legacy:
+            unknown = sorted(set(legacy) - set(self._FIELDS))
+            if unknown:
+                raise TypeError(
+                    f"PipelineStats got unexpected fields {unknown}")
+            from ..core.index import _warn_deprecated
+            _warn_deprecated(
+                "PipelineStats.kwargs",
+                "constructing PipelineStats with field keyword arguments is "
+                "deprecated: the fields are now metrics in a telemetry "
+                "MetricsRegistry (stats.registry); assign fields or use the "
+                "registry instead")
+            for k, v in legacy.items():
+                if k == "max_queue_depth":
+                    self._gauges["queue_depth"].note_high(int(v))
+                else:
+                    setattr(self, k, int(v))
+
+    @property
+    def max_queue_depth(self) -> int:
+        """High-water mark of the queue-depth gauge — maintained inside
+        the gauge's own lock, so it is race-free by construction."""
+        return self._gauges["queue_depth"].high
+
+    @max_queue_depth.setter
+    def max_queue_depth(self, v):
+        from ..core.index import _warn_deprecated
+        _warn_deprecated(
+            "PipelineStats.max_queue_depth",
+            "assigning PipelineStats.max_queue_depth is deprecated: the "
+            "high-water mark now updates atomically inside every "
+            "queue_depth change; direct writes can only EXTEND it "
+            "(note_high), never lower it")
+        self._gauges["queue_depth"].note_high(int(v))
+
+    @property
+    def occupancy(self) -> float:
+        return self.batch_rows / self.batch_slots if self.batch_slots else 0.0
+
+    @property
+    def miss_rate(self) -> float:
+        return self.deadline_missed / self.served if self.served else 0.0
+
+    def snapshot(self) -> PipelineStatsSnapshot:
+        return PipelineStatsSnapshot(
+            **{f: getattr(self, f) for f in self._FIELDS})
+
+    def __repr__(self):
+        body = ", ".join(f"{f}={getattr(self, f)}" for f in self._FIELDS)
+        return f"PipelineStats({body})"
 
 
 class Ticket:
@@ -119,14 +244,15 @@ class Ticket:
     failure); ``stats`` on the response carries queue_wait_us / service_us
     / deadline_missed alongside the usual route/bucket/version fields."""
 
-    __slots__ = ("request", "deadline_us", "t_submit", "_event", "_response",
-                 "_error")
+    __slots__ = ("request", "deadline_us", "t_submit", "t_enqueued",
+                 "_event", "_response", "_error")
 
     def __init__(self, request: Request, deadline_us: float | None,
                  t_submit: float):
         self.request = request
         self.deadline_us = deadline_us
         self.t_submit = t_submit
+        self.t_enqueued = t_submit      # stamped again once actually queued
         self._event = threading.Event()
         self._response: Response | None = None
         self._error: BaseException | None = None
@@ -256,22 +382,34 @@ class ServingPipeline:
         the total latency budget from this call; None = best effort
         (bounded by max_linger_us of batching delay)."""
         validate_kind(request.kind)
-        ticket = Ticket(request, deadline_us, time.perf_counter())
-        with self._cv:
-            if self._closing.is_set():
-                raise RuntimeError("pipeline is closed")
-            key = self.batcher.group_key(request)
-            self._queues.setdefault(key, collections.deque()).append(ticket)
-            self._stats.submitted += 1
-            self._stats.queue_depth += 1
-            self._stats.max_queue_depth = max(self._stats.max_queue_depth,
-                                              self._stats.queue_depth)
-            self._cv.notify()
+        with TEL.span("pipeline.submit", kind=request.kind):
+            ticket = Ticket(request, deadline_us, time.perf_counter())
+            with self._cv:
+                if self._closing.is_set():
+                    raise RuntimeError("pipeline is closed")
+                key = self.batcher.group_key(request)
+                self._queues.setdefault(key,
+                                        collections.deque()).append(ticket)
+                self._stats.submitted += 1
+                # the queue-depth gauge tracks its own high-water mark
+                # atomically inside this write — no separate (and
+                # race-prone) max_queue_depth read-modify-write
+                self._stats.queue_depth += 1
+                self._cv.notify()
+            ticket.t_enqueued = time.perf_counter()
         return ticket
 
-    def stats(self) -> PipelineStats:
+    def stats(self) -> PipelineStatsSnapshot:
         with self._cv:
             return self._stats.snapshot()
+
+    @property
+    def metrics_registry(self):
+        """The live telemetry :class:`MetricsRegistry` behind ``stats()``
+        — hand it to ``telemetry.write_metrics_jsonl`` for the line-
+        oriented dump."""
+        with self._cv:
+            return self._stats.registry
 
     def warmup(self, index: str, kinds_ks=None, max_bucket=None, dim=None):
         """Pre-trace the bucket ladder through the shared executable cache
@@ -344,37 +482,46 @@ class ServingPipeline:
                     # None when idle); clamp so a just-passed deadline
                     # doesn't busy-spin
                     self._cv.wait(None if extra is None else max(extra, 1e-4))
-            self._dispatch(key, taken, extra)
+            self._dispatch(key, taken, extra, time.perf_counter())
 
-    def _dispatch(self, key: tuple, tickets: list[Ticket], reason: str):
-        """Outside the lock: pin -> execute -> scatter -> account."""
-        group = self.batcher.plan([t.request for t in tickets])[0]
-        t_disp = time.perf_counter()
-        try:
-            entry = self.store.pin(group.index)
-        except KeyError as err:
-            miss = KeyError(f"no index named {group.index!r} "
-                            "(create_index before submitting)")
-            miss.__cause__ = err
-            with self._cv:
-                self._stats.failed += len(tickets)
-            for t in tickets:
-                t._fail(miss)
-            return
-        try:
-            responses = execute_group(self.engine, self.config.service,
-                                      entry, group)
-        except Exception as err:
-            with self._cv:
-                self._stats.failed += len(tickets)
-            for t in tickets:
-                t._fail(err)
-            return
-        finally:
-            self.store.release(entry)
-        t_done = time.perf_counter()
+    def _dispatch(self, key: tuple, tickets: list[Ticket], reason: str,
+                  t_picked: float | None = None):
+        """Outside the lock: pin -> execute -> scatter -> account.
+        `t_picked` is when the scheduler pulled the group off its queue —
+        the queue/batch phase boundary in the request's span tree."""
+        with TEL.span("pipeline.dispatch", reason=reason,
+                      requests=len(tickets)) as dsp:
+            group = self.batcher.plan([t.request for t in tickets])[0]
+            dsp.annotate(index=group.index, bucket=group.bucket)
+            t_disp = time.perf_counter()
+            if t_picked is None:
+                t_picked = t_disp
+            try:
+                entry = self.store.pin(group.index)
+            except KeyError as err:
+                miss = KeyError(f"no index named {group.index!r} "
+                                "(create_index before submitting)")
+                miss.__cause__ = err
+                with self._cv:
+                    self._stats.failed += len(tickets)
+                for t in tickets:
+                    t._fail(miss)
+                return
+            try:
+                responses = execute_group(self.engine, self.config.service,
+                                          entry, group)
+            except Exception as err:
+                with self._cv:
+                    self._stats.failed += len(tickets)
+                for t in tickets:
+                    t._fail(err)
+                return
+            finally:
+                self.store.release(entry)
+            t_done = time.perf_counter()
 
         service_us = (t_done - t_disp) * 1e6
+        tracer = TEL.get_tracer() if TEL.enabled() else None
         missed = 0
         for rid, ticket in enumerate(tickets):
             resp = responses[rid]
@@ -382,13 +529,69 @@ class ServingPipeline:
             late = (ticket.deadline_us is not None
                     and total_us > ticket.deadline_us)
             missed += late
+            phases = self._phase_breakdown(ticket, t_picked, t_disp,
+                                           service_us, resp.stats.kernel_us)
+            span_id = 0
+            if tracer is not None:
+                span_id = self._emit_request_spans(tracer, ticket, phases,
+                                                   t_done, late)
             stats = dataclasses.replace(
                 resp.stats,
                 queue_wait_us=(t_disp - ticket.t_submit) * 1e6,
                 service_us=service_us, deadline_us=ticket.deadline_us,
-                deadline_missed=late)
+                deadline_missed=late, phase_us=phases, span_id=span_id)
             ticket._complete(dataclasses.replace(resp, stats=stats))
 
+        self._account(key, group, tickets, reason, service_us, missed)
+
+    @staticmethod
+    def _phase_breakdown(ticket: Ticket, t_picked: float, t_disp: float,
+                         service_us: float, kernel_us: float) -> dict:
+        """Tile one request's lifetime into the REQUEST_PHASES dict (µs).
+
+        The boundaries are clamped monotonic (t_submit <= t_enqueued <=
+        t_picked <= t_disp), so submit+queue+batch == queue_wait_us and
+        dispatch+kernel == service_us EXACTLY — the acceptance criterion's
+        span-sum property holds by construction, not by luck."""
+        t_enq = min(max(ticket.t_enqueued, ticket.t_submit), t_picked)
+        t_pk = min(max(t_picked, t_enq), t_disp)
+        kern = min(max(kernel_us, 0.0), service_us)
+        return {
+            "submit": (t_enq - ticket.t_submit) * 1e6,
+            "queue": (t_pk - t_enq) * 1e6,
+            "batch": (t_disp - t_pk) * 1e6,
+            "dispatch": service_us - kern,
+            "kernel": kern,
+        }
+
+    @staticmethod
+    def _emit_request_spans(tracer, ticket: Ticket, phases: dict,
+                            t_done: float, late: bool) -> int:
+        """Retroactively synthesize one request's span tree — a "request"
+        root spanning submit->delivery with one child per phase — and
+        return the root span id (propagated into RequestStats.span_id so
+        a deadline-missed response can be found in the trace). Phases are
+        only fully known at batch completion, hence add_span rather than
+        live spans."""
+        t0_ns = int(ticket.t_submit * 1e9)
+        root = tracer.add_span(
+            "request", t0_ns, int(t_done * 1e9), tid="requests",
+            kind=ticket.request.kind, deadline_missed=bool(late),
+            deadline_us=ticket.deadline_us)
+        cursor = t0_ns
+        for phase in REQUEST_PHASES:
+            dur_ns = int(phases[phase] * 1e3)
+            tracer.add_span(
+                f"request.{phase}", cursor, cursor + dur_ns,
+                parent_id=root, tid="requests",
+                clock="device" if phase == "kernel" else "wall",
+                deadline_missed=bool(late))
+            cursor += dur_ns
+        return root
+
+    def _account(self, key: tuple, group, tickets: list[Ticket],
+                 reason: str, service_us: float, missed: int):
+        """Post-scatter bookkeeping: EWMA service estimate + counters."""
         ewma_key = (key, group.bucket)
         with self._cv:
             prev = self._est.get(ewma_key)
@@ -422,7 +625,8 @@ class ServingPipeline:
             try:
                 # the slow part: shadow build/refit outside every lock the
                 # serving path touches; publication inside is one dict swap
-                action = self.store.update(name, values).action
+                with TEL.span("pipeline.maintenance", index=name):
+                    action = self.store.update(name, values).action
             except Exception:
                 failed = True
             finally:

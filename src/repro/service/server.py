@@ -19,6 +19,7 @@ from ..core import engine as E
 from ..core import geometry as G
 from ..core import predicates as P
 from ..core.access import default_indexable_getter
+from ..telemetry import tracer as TEL
 from .batcher import (KIND_KNN, KIND_RAY, KIND_WITHIN, Batcher, Group,
                       Request, bucket_size, knn_request, ray_request,
                       within_request)
@@ -59,6 +60,11 @@ class RequestStats:
     service_us: float = 0.0       # batch dispatch -> results ready
     deadline_us: float | None = None
     deadline_missed: bool = False
+    # telemetry (DESIGN.md §10; zero/None unless telemetry is enabled —
+    # kernel_us needs a device fence the disabled path must not pay):
+    kernel_us: float = 0.0        # device-fenced engine executable time
+    span_id: int = 0              # "request" root span id in the trace
+    phase_us: dict | None = None  # REQUEST_PHASES tiling (async pipeline)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,56 +88,67 @@ def execute_group(engine: E.QueryEngine, config: ServiceConfig,
     ``QueryServer.handle`` and the async ``ServingPipeline`` — the caller
     owns version pinning and any timing bookkeeping."""
     bvh = entry.bvh
-    a = jnp.asarray(group.a)
-    # degenerate indexes (N < 2) have no tree; the engine's cached
-    # executables need one, but the BVH API itself linear-scans — a
-    # cloud that shrinks to one point must not take down serving
-    tiny = bvh.tree is None
-    info = E.ExecInfo(E.ROUTE_LOOP, False) if tiny else None
+    with TEL.span("server.execute_group", kind=group.kind,
+                  bucket=group.bucket, index=entry.name,
+                  version=entry.version):
+        a = jnp.asarray(group.a)
+        # degenerate indexes (N < 2) have no tree; the engine's cached
+        # executables need one, but the BVH API itself linear-scans — a
+        # cloud that shrinks to one point must not take down serving
+        tiny = bvh.tree is None
+        info = E.ExecInfo(E.ROUTE_LOOP, False) if tiny else None
 
-    overflow_rows = None
-    if group.kind == KIND_WITHIN:
-        preds = P.intersects(G.Spheres(a, jnp.asarray(group.b)))
-        if tiny:
-            counts, buf = bvh._fill_impl(preds, config.capacity, bvh.policy)
-        else:
-            (counts, buf), info = engine.exec_spatial(
-                bvh, preds, config.capacity)
-        counts, buf = np.asarray(counts), np.asarray(buf)
-        overflow_rows = counts > config.capacity
-        res_rows = (counts, buf)
-    elif group.kind == KIND_KNN:
-        preds = P.nearest(G.Points(a), k=group.k)
-        if tiny:
-            res = bvh.query(preds)
-            d, i = res.distances, res.indices
-        else:
-            (d, i), info = engine.exec_knn(bvh, preds)
-        res_rows = (np.asarray(d), np.asarray(i))
-    else:  # KIND_RAY
-        rays = G.Rays(a, jnp.asarray(group.b))
-        if tiny:
-            res = bvh.query(P.RayNearest(rays, group.k))
-            d, i = res.distances, res.indices
-        else:
-            (d, i), info = engine.exec_ray_nearest(bvh, rays, group.k)
-        res_rows = (np.asarray(d), np.asarray(i))
-
-    out: dict[int, Response] = {}
-    for rid, start, m in group.members:
-        stats = RequestStats(kind=group.kind, route=info.route,
-                             bucket=group.bucket, index_name=entry.name,
-                             index_version=entry.version,
-                             cache_hit=info.cache_hit)
-        sl = slice(start, start + m)
+        overflow_rows = None
         if group.kind == KIND_WITHIN:
-            counts, buf = res_rows
-            out[rid] = Response(
-                stats, counts=counts[sl], idxs=buf[sl],
-                overflow=bool(overflow_rows[sl].any()))
-        else:
-            d, i = res_rows
-            out[rid] = Response(stats, dists=d[sl], idxs=i[sl])
+            preds = P.intersects(G.Spheres(a, jnp.asarray(group.b)))
+            if tiny:
+                counts, buf = bvh._fill_impl(preds, config.capacity,
+                                             bvh.policy)
+            else:
+                (counts, buf), info = engine.exec_spatial(
+                    bvh, preds, config.capacity)
+            # CSR assembly: device buffers -> host arrays + overflow flags
+            with TEL.span("server.assemble", kind=group.kind):
+                counts, buf = np.asarray(counts), np.asarray(buf)
+                overflow_rows = counts > config.capacity
+            res_rows = (counts, buf)
+        elif group.kind == KIND_KNN:
+            preds = P.nearest(G.Points(a), k=group.k)
+            if tiny:
+                res = bvh.query(preds)
+                d, i = res.distances, res.indices
+            else:
+                (d, i), info = engine.exec_knn(bvh, preds)
+            with TEL.span("server.assemble", kind=group.kind):
+                res_rows = (np.asarray(d), np.asarray(i))
+        else:  # KIND_RAY
+            rays = G.Rays(a, jnp.asarray(group.b))
+            if tiny:
+                res = bvh.query(P.RayNearest(rays, group.k))
+                d, i = res.distances, res.indices
+            else:
+                (d, i), info = engine.exec_ray_nearest(bvh, rays, group.k)
+            with TEL.span("server.assemble", kind=group.kind):
+                res_rows = (np.asarray(d), np.asarray(i))
+
+        out: dict[int, Response] = {}
+        with TEL.span("server.scatter", requests=len(group.members)):
+            for rid, start, m in group.members:
+                stats = RequestStats(kind=group.kind, route=info.route,
+                                     bucket=group.bucket,
+                                     index_name=entry.name,
+                                     index_version=entry.version,
+                                     cache_hit=info.cache_hit,
+                                     kernel_us=info.kernel_us)
+                sl = slice(start, start + m)
+                if group.kind == KIND_WITHIN:
+                    counts, buf = res_rows
+                    out[rid] = Response(
+                        stats, counts=counts[sl], idxs=buf[sl],
+                        overflow=bool(overflow_rows[sl].any()))
+                else:
+                    d, i = res_rows
+                    out[rid] = Response(stats, dists=d[sl], idxs=i[sl])
     return out
 
 

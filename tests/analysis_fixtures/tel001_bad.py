@@ -1,0 +1,18 @@
+"""Fixture: telemetry spans that can leak on exception paths (TEL001)."""
+from repro.telemetry import span
+
+
+def serve(tracer, batch):
+    sp = tracer.span("serve")          # BAD: a raise in run() never
+    out = batch.run()                  # closes sp — the span vanishes
+    sp.__exit__(None, None, None)
+    return out
+
+
+def fire_and_forget():
+    span("oops")                       # BAD: never entered, records nothing
+
+
+class Worker:
+    def start(self, tracer):
+        self.sp = tracer.span("job")   # BAD: manual close unverifiable

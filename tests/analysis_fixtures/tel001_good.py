@@ -1,0 +1,31 @@
+"""Fixture twin: every span has a guaranteed close (TEL001-clean)."""
+from repro.telemetry import span
+
+
+def serve(tracer, batch):
+    with tracer.span("serve"):
+        return batch.run()
+
+
+def serve_prebound(tracer, batch):
+    sp = tracer.span("serve")          # assignment ok: entered immediately
+    with sp:
+        out = sp.fence(batch.run())
+    return out, sp.dur_us
+
+
+def serve_finally(tracer, batch):
+    sp = tracer.span("serve")
+    try:
+        return batch.run()
+    finally:
+        sp.__exit__(None, None, None)
+
+
+def quick():
+    with span("quick", tag=1):
+        pass
+
+
+def completed_interval(tracer, t0, t1):
+    return tracer.add_span("phase", t0, t1)    # records in one call

@@ -27,7 +27,8 @@ def _rules_of(findings, *, live_only=True):
 # ---------------------------------------------------------------------------
 
 STATIC_RULES = ["lck001", "lck002", "lck003", "lck004",
-                "trc001", "trc002", "trc003", "trc004", "plk003"]
+                "trc001", "trc002", "trc003", "trc004", "plk003",
+                "tel001"]
 
 
 @pytest.mark.parametrize("rule", STATIC_RULES)

@@ -151,3 +151,79 @@ def test_new_api_is_warning_free():
         bvh.count(preds)
         bvh.query(P.nearest(G.Points(q), k=2))
         BruteForce(vals).query(preds)
+
+
+def test_stats_legacy_kwargs_warn_and_seed_the_registry():
+    """ISSUE 9: EngineStats/PipelineStats fields moved into a telemetry
+    MetricsRegistry; constructing with field keyword arguments still works
+    but warns once (the values now live in stats.registry)."""
+    from repro.core.engine import EngineStats
+    from repro.service.pipeline import PipelineStats
+
+    IX._SEEN_DEPRECATIONS.clear()
+    with pytest.warns(DeprecationWarning, match="MetricsRegistry"):
+        es = EngineStats(cache_hits=5, jit_traces=2)
+    assert (es.cache_hits, es.cache_misses, es.jit_traces) == (5, 0, 2)
+    es.cache_hits += 1                        # legacy spelling still lands
+    assert es.registry.snapshot()["engine.cache_hits"]["value"] == 6
+    with pytest.raises(TypeError, match="unexpected"):
+        EngineStats(nope=1)
+
+    IX._SEEN_DEPRECATIONS.clear()
+    with pytest.warns(DeprecationWarning, match="MetricsRegistry"):
+        ps = PipelineStats(submitted=3, max_queue_depth=7)
+    assert ps.submitted == 3 and ps.max_queue_depth == 7
+    assert ps.registry.snapshot()["pipeline.queue_depth"]["high"] == 7
+    with pytest.raises(TypeError, match="unexpected"):
+        PipelineStats(nope=1)
+    IX._SEEN_DEPRECATIONS.clear()
+
+
+def test_max_queue_depth_setter_is_a_warn_once_extend_only_shim():
+    """The high-water mark updates atomically inside every queue_depth
+    change now; direct assignment warns and can only EXTEND the mark
+    (the racy read-modify-write spelling could silently lower it)."""
+    import warnings
+    from repro.service.pipeline import PipelineStats
+
+    ps = PipelineStats()
+    ps.queue_depth += 5
+    assert ps.max_queue_depth == 5            # tracked by the gauge itself
+    IX._SEEN_DEPRECATIONS.clear()
+    with pytest.warns(DeprecationWarning, match="note_high"):
+        ps.max_queue_depth = 2                # lower: ignored
+    assert ps.max_queue_depth == 5
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        ps.max_queue_depth = 9                # higher: extends, no re-warn
+    assert ps.max_queue_depth == 9
+    assert not [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    IX._SEEN_DEPRECATIONS.clear()
+
+
+def test_stats_warn_once_per_spelling():
+    import warnings
+    from repro.core.engine import EngineStats
+    IX._SEEN_DEPRECATIONS.clear()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        EngineStats(cache_hits=1)
+        EngineStats(cache_hits=2)
+    assert len([w for w in rec
+                if issubclass(w.category, DeprecationWarning)]) == 1
+    IX._SEEN_DEPRECATIONS.clear()
+
+
+def test_new_stats_spellings_are_warning_free():
+    import warnings
+    from repro.core.engine import EngineStats
+    from repro.service.pipeline import PipelineStats
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        es = EngineStats()
+        es.cache_hits += 1
+        assert es.snapshot().cache_hits == 1
+        ps = PipelineStats()
+        ps.queue_depth += 1
+        assert ps.max_queue_depth == 1        # reading the mark is free
+        assert ps.snapshot().queue_depth == 1
