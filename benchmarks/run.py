@@ -31,11 +31,12 @@ MODULES = [
     "bench_distributed",    # §2.3 callback comm saving + weak scaling
     "bench_service",        # DESIGN.md §5 refit + bucketed serving
     "bench_pipeline",       # DESIGN.md §7 async deadline-aware load gen
+    "bench_sharded",        # DESIGN.md §11 sharded serving weak scaling
 ]
 
 # JSON keys owned by MERGE_INTO modules, preserved when the owning module
 # rewrites its file: BENCH_<suffix>.json -> keys to carry over
-PRESERVE = {"service": ("pipeline",)}
+PRESERVE = {"service": ("pipeline",), "distributed": ("weak_scaling",)}
 
 
 def main():

@@ -41,6 +41,12 @@ python -m pytest -q -p no:cacheprovider \
 # Prints metrics only — run.py owns persisting them to BENCH_service.json.
 python -m benchmarks.bench_pipeline --smoke
 
+# sharded-serving smoke (DESIGN.md §11): multi-device subprocesses under a
+# forced host device count — builds, serves, and distributed-refits a
+# ShardedIndexStore on 1- and 2-shard meshes, asserts all four collective
+# phase spans fired, and oracle-checks the served results.
+python -m benchmarks.bench_sharded --smoke
+
 # construction smoke (ISSUE 7): fused Pallas build vs reference build at a
 # fixed seed — raises if the trees are not bit-identical node-for-node.
 python -m benchmarks.bench_construction --smoke

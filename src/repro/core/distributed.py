@@ -27,10 +27,12 @@ Structure (mirrors the paper):
     originating shard via ``all_to_all``;
   * CALLBACKS RUN ON THE DATA-OWNING SHARD (§2.3's headline feature): only
     the reduced callback state crosses the interconnect, never the stored
-    values. Correspondingly ``QueryResult.values`` is None here — reduce
-    data-side with ``callback=`` instead of shipping values.
-    ``benchmarks/bench_distributed.py`` measures the collective-byte
-    saving straight from the lowered HLO.
+    values. Correspondingly ``QueryResult.values`` is None here by
+    default — reduce data-side with ``callback=`` instead of shipping
+    values. Attach-data scenarios that DO need the matched values opt in
+    with ``policy.override(ship_values=True)``; the collective then moves
+    exactly the matched rows. ``benchmarks/bench_distributed.py`` measures
+    the collective-byte saving straight from the lowered HLO.
 
 All paths are jit/shard_map-closed: shapes are static, results land
 sharded over the same axis as the originating predicates (whose batch
@@ -77,14 +79,37 @@ class DistributedTree(Index):
     def __init__(self, mesh, axis: str, values,
                  indexable_getter=default_indexable_getter, *,
                  policy: ExecutionPolicy | None = None):
-        self.mesh = mesh
-        self.axis = axis
-        self.policy = policy or ExecutionPolicy()
+        self._init_meta(mesh, axis, values, indexable_getter, policy)
+
+        def build_local(vals_local):
+            tree = lbvh_build(indexable_getter(vals_local))
+            return tree, (tree.node_lo[:1], tree.node_hi[:1])
+
+        spec = PS(axis)
+        built = jax.jit(shard_map(
+            build_local, mesh=mesh, in_specs=(spec,),
+            out_specs=(spec, (spec, spec)), check_vma=False))(self.values)
+        self.trees, (self.top_lo, self.top_hi) = built
+        # self.trees: pytree whose arrays are shard-concatenated local trees
+        # self.top_lo/hi: (R, dim) replicated-by-construction top boxes
+
+    @staticmethod
+    def _adapt_values(values, indexable_getter):
         if (indexable_getter is default_indexable_getter
                 and isinstance(values, (jax.Array, np.ndarray))):
             # adapt raw (N, dim) coordinate arrays through the access traits
             # so leaf tests see a geometry container
-            values = as_geometry(jnp.asarray(values))
+            return as_geometry(jnp.asarray(values))
+        return values
+
+    def _init_meta(self, mesh, axis, values, indexable_getter, policy):
+        if axis not in mesh.shape:
+            raise ValueError(f"axis {axis!r} is not an axis of the mesh "
+                             f"(axes: {tuple(mesh.axis_names)})")
+        self.mesh = mesh
+        self.axis = axis
+        self.policy = policy or ExecutionPolicy()
+        values = self._adapt_values(values, indexable_getter)
         self.values = values
         self._getter = indexable_getter
         boxes = indexable_getter(values)
@@ -99,17 +124,46 @@ class DistributedTree(Index):
                 f"DistributedTree needs >= 2 values per shard (got N={n} "
                 f"over {self.R} shards); use BVH for degenerate sizes")
 
-        def build_local(vals_local):
-            tree = lbvh_build(indexable_getter(vals_local))
-            return tree, (tree.node_lo[:1], tree.node_hi[:1])
+    @classmethod
+    def from_local_trees(cls, mesh, axis: str, values, trees, top_lo, top_hi,
+                         indexable_getter=default_indexable_getter, *,
+                         policy: ExecutionPolicy | None = None):
+        """Wrap PREBUILT per-shard local trees — the swap-in constructor
+        for distributed refit (``ShardedIndexStore``): no re-sort, no
+        rebuild, no re-gather of the top index.
 
-        spec = PS(axis)
-        built = jax.jit(shard_map(
-            build_local, mesh=mesh, in_specs=(spec,),
-            out_specs=(spec, (spec, spec)), check_vma=False))(values)
-        self.trees, (self.top_lo, self.top_hi) = built
-        # self.trees: pytree whose arrays are shard-concatenated local trees
-        # self.top_lo/hi: (R, dim) replicated-by-construction top boxes
+        ``trees`` must be the shard-concatenated LBVH pytree produced under
+        the SAME ``(mesh, axis)`` over these values (what ``__init__`` or a
+        per-shard ``shard_map`` refit yields); ``top_lo``/``top_hi`` are the
+        (R, dim) per-shard scene bounds. Mismatched mesh/axis/leaf-count
+        raise a loud ``ValueError`` rather than serving a torn index.
+        """
+        obj = cls.__new__(cls)
+        obj._init_meta(mesh, axis, values, indexable_getter, policy)
+        n = obj.R * obj.n_local
+        n_leaves = int(trees.leaf_perm.shape[0])
+        if n_leaves != n:
+            raise ValueError(
+                f"local trees cover {n_leaves} leaves but values have N={n};"
+                " rebuild instead of wrapping stale trees")
+        want_nodes = 2 * n - obj.R     # R shards x (2*n_local - 1) nodes
+        got_nodes = int(trees.node_lo.shape[0])
+        if got_nodes != want_nodes:
+            raise ValueError(
+                f"local trees hold {got_nodes} nodes but a {obj.R}-shard "
+                f"mesh over N={n} values needs {want_nodes} (= 2N - R); "
+                "were these trees built under a different mesh/axis?")
+        top_lo = jnp.asarray(top_lo)
+        top_hi = jnp.asarray(top_hi)
+        want_top = (obj.R, obj.dim)
+        if top_lo.shape != want_top or top_hi.shape != want_top:
+            raise ValueError(
+                f"top bounds must be per-shard scene boxes of shape "
+                f"{want_top}; got {top_lo.shape} / {top_hi.shape}")
+        obj.trees = trees
+        obj.top_lo = top_lo
+        obj.top_hi = top_hi
+        return obj
 
     # --- container interface ---------------------------------------------
     def size(self) -> int:
@@ -252,10 +306,40 @@ class DistributedTree(Index):
             "RayOrderedIntersect is single-node only (the collect state "
             "cannot cross shards); gather values locally or use RayNearest")
 
-    def _gather_values(self, flat_idx):
-        # values live on their owning shard; shipping them contradicts the
-        # §2.3 design — results carry global indices only
-        return None
+    def _gather_values(self, flat_idx, pol=None):
+        """Values live on their owning shard; by default results carry
+        global indices only (``QueryResult.values is None`` — reduce
+        data-side with ``callback=``, §2.3). ``policy.ship_values=True``
+        opts in for attach-data scenarios: each shard contributes the
+        matched rows it owns and one psum delivers them everywhere, so
+        collective bytes scale with matches × value size — the
+        generalization of the retired :func:`ship_values_baseline` (any
+        values pytree, any predicate kind, exactly the matched set)."""
+        if pol is None or not pol.ship_values:
+            return None
+        if int(flat_idx.shape[0]) == 0:
+            # nothing matched: no collective (XLA also rejects zero-length
+            # all_gather dims); a plain local gather yields the empty pytree
+            return T.value_at(self.values, flat_idx)
+        axis, n_local = self.axis, self.n_local
+
+        def step(vals_local, idx):
+            r = jax.lax.axis_index(axis)
+            local = idx - r * n_local
+            mine = (local >= 0) & (local < n_local)
+            li = jnp.clip(local, 0, n_local - 1)
+
+            def pick(a):
+                v = a[li]
+                mask = mine.reshape((-1,) + (1,) * (v.ndim - 1))
+                return jax.lax.psum(jnp.where(mask, v, jnp.zeros((), v.dtype)),
+                                    axis)
+
+            return jax.tree_util.tree_map(pick, vals_local)
+
+        return jax.jit(shard_map(
+            step, mesh=self.mesh, in_specs=(PS(self.axis), PS()),
+            out_specs=PS(), check_vma=False))(self.values, flat_idx)
 
     # --- deprecation shims (the old per-kind methods) ---------------------
     def query_knn(self, queries, k: int):
@@ -302,17 +386,26 @@ class DistributedTree(Index):
         """DEPRECATED alias of :func:`ship_values_baseline`."""
         _warn_deprecated(
             "DistributedTree.query_values_to_origin", "query_values_to_"
-            "origin is deprecated; it exists only as the §2.3 benchmark "
-            "anti-pattern — call ship_values_baseline(tree, ...) directly")
+            "origin is deprecated; use query(predicates, policy=policy."
+            "override(ship_values=True)) to ship matched values")
         return ship_values_baseline(self, queries, radius, capacity)
 
 
 def ship_values_baseline(tree: DistributedTree, queries, radius,
                          capacity: int):
-    """ANTI-PATTERN baseline for the §2.3 benchmark: ship up to `capacity`
-    matched VALUES (coordinates) back to the originating shard instead of
-    reducing data-side. Collective bytes scale with capacity * dim —
-    compare with the counting callback in the HLO. Requires Points values."""
+    """DEPRECATED anti-pattern baseline for the §2.3 benchmark: ship up to
+    `capacity` matched VALUES (coordinates) back to the originating shard
+    instead of reducing data-side. Collective bytes scale with capacity *
+    dim — compare with the counting callback in the HLO. Requires Points
+    values. New code wants ``query(preds,
+    policy=tree.policy.override(ship_values=True))``, which ships exactly
+    the matched set for any values pytree and any predicate kind."""
+    _warn_deprecated(
+        "ship_values_baseline", "ship_values_baseline is deprecated; use "
+        "query(predicates, policy=policy.override(ship_values=True)) — "
+        "QueryResult.values then carries the matched values. The helper "
+        "remains only as the fixed-capacity HLO baseline for "
+        "benchmarks/bench_distributed.py")
     if not isinstance(tree.values, G.Points):
         raise TypeError("ship_values_baseline requires Points values")
     axis, R, n_local = tree.axis, tree.R, tree.n_local

@@ -42,7 +42,7 @@ result-layout semantics:
     _knn_impl(preds, policy)              -> (dists, idxs) (Q, k)
     _csr_exact(preds, policy)             -> QueryResult | None (fast path)
     _collect_with_t(preds, cap, policy)   -> (counts, idxs, ts)
-    _gather_values(flat_idx)              -> values pytree | None
+    _gather_values(flat_idx, policy)      -> values pytree | None
 
 Legacy spellings (``query(space, preds)``, ``count(space, preds)``,
 ``knn``, ``query_callback``, ``query_out``, and the DistributedTree
@@ -121,6 +121,13 @@ class ExecutionPolicy:
                    persisted table's choice, default pallas — both are
                    bit-identical). ``REPRO_ENGINE_FORCE`` still beats
                    this, for A/B debugging.
+    ship_values:   distributed-only: opt in to shipping MATCHED values to
+                   the originating shard so ``QueryResult.values`` is
+                   populated (attach-data scenarios). Off by default —
+                   the §2.3 design reduces data-side via callbacks; when
+                   on, collective bytes scale with matches × value size.
+                   Single-process backends always gather locally and
+                   ignore this flag.
     """
     engine: Any = None
     device: Any = None
@@ -129,6 +136,7 @@ class ExecutionPolicy:
     combine: Any = None
     route_table: Any = None
     build_engine: str | None = None
+    ship_values: bool = False
 
     def __post_init__(self):
         if isinstance(self.route_table, str):
@@ -275,7 +283,7 @@ class Index:
         d, i = self._knn_impl(predicates, pol)
         if self.size() == 0:        # nothing to gather values from
             return QueryResult(indices=i, distances=d)
-        vals = self._gather_values(jnp.maximum(i, 0).reshape(-1))
+        vals = self._gather_values(jnp.maximum(i, 0).reshape(-1), pol)
         if vals is not None:
             q, k = i.shape
             vals = jax.tree_util.tree_map(
@@ -313,7 +321,7 @@ class Index:
                                    jnp.cumsum(clamped)]).astype(jnp.int32)
         total = int(offsets[-1])
         flat_idx = _csr_pack(buf, clamped, offsets, total)
-        return QueryResult(values=self._gather_values(flat_idx),
+        return QueryResult(values=self._gather_values(flat_idx, pol),
                            indices=flat_idx, offsets=offsets,
                            overflow=overflow)
 
@@ -339,7 +347,7 @@ class Index:
         total = int(offsets[-1])
         flat_idx = _csr_pack(idxs_s, count, offsets, total)
         flat_t = _csr_pack(ts_s, count, offsets, total)
-        return QueryResult(values=self._gather_values(flat_idx),
+        return QueryResult(values=self._gather_values(flat_idx, pol),
                            indices=flat_idx, offsets=offsets,
                            distances=flat_t)
 
@@ -380,7 +388,7 @@ class Index:
         s0 = _bcast_state(s0, len(predicates))
         return self._query_callback_impl(predicates, cb, s0, pol)
 
-    def _gather_values(self, flat_idx):
+    def _gather_values(self, flat_idx, pol=None):
         from .traversal import value_at
         return value_at(self.values, flat_idx)
 

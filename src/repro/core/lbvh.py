@@ -34,7 +34,7 @@ import jax.numpy as jnp
 from . import morton as M
 from .geometry import Boxes
 
-__all__ = ["LBVH", "build", "refit", "sah_cost"]
+__all__ = ["LBVH", "build", "refit", "refit_with_quality", "sah_cost"]
 
 BUILD_ENGINES = ("auto", "pallas", "ref")
 
@@ -309,6 +309,34 @@ def refit(tree: LBVH, boxes: Boxes) -> LBVH:
         tree,
         node_lo=jnp.concatenate([int_lo, leaf_lo], 0),
         node_hi=jnp.concatenate([int_hi, leaf_hi], 0))
+
+
+@jax.jit
+def refit_with_quality(tree: LBVH, boxes: Boxes) -> tuple[LBVH, jax.Array]:
+    """Refit AND measure in one pass: returns ``(refitted_tree, sah)``.
+
+    The shard-local refit entry for distributed serving (DESIGN.md §11):
+    under ``shard_map`` every shard refits its local tree and reports its
+    own SAH cost without a second sweep over the node arrays — the
+    internal boxes feeding :func:`_surface_measure` are the ones the RMQ
+    pass just produced. Semantics match ``refit`` + ``sah_cost`` exactly.
+    """
+    n = tree.num_leaves
+    if boxes.lo.shape[0] != n:
+        raise ValueError(f"refit needs the same leaf count (tree has {n}, "
+                         f"got {boxes.lo.shape[0]}); rebuild instead")
+    max_log2 = max((n - 1).bit_length(), 1)
+    leaf_lo = boxes.lo[tree.leaf_perm]
+    leaf_hi = boxes.hi[tree.leaf_perm]
+    int_lo, int_hi = _refit_rmq(leaf_lo, leaf_hi, tree.range_first,
+                                tree.range_last[:n - 1], max_log2)
+    areas = _surface_measure(int_lo, int_hi)
+    sah = jnp.sum(areas) / jnp.maximum(areas[0], jnp.finfo(areas.dtype).tiny)
+    new = dataclasses.replace(
+        tree,
+        node_lo=jnp.concatenate([int_lo, leaf_lo], 0),
+        node_hi=jnp.concatenate([int_hi, leaf_hi], 0))
+    return new, sah
 
 
 def _surface_measure(lo, hi):

@@ -13,6 +13,11 @@ over *live* indexes.
   * :mod:`server`      — synchronous ``QueryServer`` tying registry +
     batcher + ``QueryEngine`` together, with per-request stats (route,
     bucket, index version).
+  * :mod:`sharded`     — distributed serving (DESIGN.md §11):
+    ``ShardedIndexStore`` builds/refits ``DistributedTree`` indexes per
+    shard under ``shard_map`` and publishes them through the same atomic
+    swap; ``ShardedExecutor`` answers batches with all-gathered
+    predicates, local traversals, and ``all_to_all``/``psum`` merges.
   * :mod:`pipeline`    — asynchronous, deadline-aware ``ServingPipeline``:
     clients ``submit(request, deadline_us=...)`` into a queue, a
     scheduler thread forms adaptive batches (close on full OR on deadline
@@ -26,9 +31,11 @@ from .index_store import IndexStore, IndexVersion
 from .pipeline import PipelineConfig, PipelineStats, ServingPipeline, Ticket
 from .server import (QueryServer, RequestStats, Response, ServiceConfig,
                      execute_group)
+from .sharded import ShardedExecutor, ShardedIndexStore, ShardedIndexVersion
 
 __all__ = ["Batcher", "Request", "SUPPORTED_KINDS", "knn_request",
            "ray_request", "within_request", "IndexStore", "IndexVersion",
            "QueryServer", "RequestStats", "Response", "ServiceConfig",
            "execute_group", "ServingPipeline", "PipelineConfig",
-           "PipelineStats", "Ticket"]
+           "PipelineStats", "Ticket", "ShardedExecutor", "ShardedIndexStore",
+           "ShardedIndexVersion"]

@@ -49,6 +49,12 @@ class IndexVersion:
         """Current SAH cost relative to the last full build (1.0 = fresh)."""
         return self.sah / max(self.sah_built, 1e-30)
 
+    @property
+    def dim(self) -> int:
+        """Coordinate dimension of the indexed geometry (warmup reads this
+        uniformly across plain and sharded versions)."""
+        return int(self.bvh._boxes.dim)
+
 
 class IndexStore:
     """Thread-safe name -> IndexVersion registry with refit-aware updates."""

@@ -87,6 +87,11 @@ def execute_group(engine: E.QueryEngine, config: ServiceConfig,
     ids recorded in ``group.members``). Shared by the synchronous
     ``QueryServer.handle`` and the async ``ServingPipeline`` — the caller
     owns version pinning and any timing bookkeeping."""
+    if getattr(entry, "sharded", False):
+        # sharded versions carry their mesh's ShardedExecutor: collective
+        # staged dispatch replaces the engine's single-device executable
+        # cache (duck-typed so this module never imports service.sharded)
+        return entry.executor.execute_group(config, entry, group)
     bvh = entry.bvh
     with TEL.span("server.execute_group", kind=group.kind,
                   bucket=group.bucket, index=entry.name,
@@ -207,7 +212,7 @@ class QueryServer:
         if max_bucket is None:
             max_bucket = self.config.max_bucket
         if dim is None:
-            dim = int(self.store.get(index).bvh._boxes.dim)
+            dim = self.store.get(index).dim
 
         b = self.config.min_bucket
         top = bucket_size(max_bucket, self.config.min_bucket)

@@ -227,3 +227,34 @@ def test_new_stats_spellings_are_warning_free():
         ps.queue_depth += 1
         assert ps.max_queue_depth == 1        # reading the mark is free
         assert ps.snapshot().queue_depth == 1
+
+
+def test_ship_values_baseline_is_a_warn_once_shim():
+    """ISSUE 10: the fixed-capacity value-shipping helper is deprecated in
+    favor of the policy-gated opt-in (``override(ship_values=True)``),
+    which ships exactly the matched set through the unified query()."""
+    import warnings
+
+    from repro.compat import make_mesh
+    from repro.core.distributed import DistributedTree, ship_values_baseline
+
+    pts = np.random.default_rng(0).uniform(0, 1, (16, 3)).astype(np.float32)
+    tree = DistributedTree(make_mesh((1,), ("data",)), "data", pts)
+    q = jnp.asarray(pts[:4])
+
+    IX._SEEN_DEPRECATIONS.clear()
+    with pytest.warns(DeprecationWarning, match="ship_values=True"):
+        ship_values_baseline(tree, q, 0.3, 4)
+    with warnings.catch_warnings(record=True) as rec:   # warn-once
+        warnings.simplefilter("always")
+        ship_values_baseline(tree, q, 0.3, 4)
+    assert not [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    IX._SEEN_DEPRECATIONS.clear()
+
+    # the new spelling is warning-free and populates QueryResult.values
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        res = tree.query(
+            P.intersects(G.Spheres(q, jnp.full((4,), 0.3, jnp.float32))),
+            policy=tree.policy.override(ship_values=True))
+    assert res.values is not None

@@ -245,3 +245,94 @@ def test_all_backends_agree_pairwise():
         for i in range(Q):
             assert set(gi[off[i]:off[i + 1]].tolist()) \
                 == set(ri[off[i]:off[i + 1]].tolist())
+
+
+# ---------------------------------------------------------------------------
+# value shipping (ISSUE 10 satellite): the policy-gated opt-in closes the
+# _gather_values / QueryResult.values asymmetry for attach-data scenarios
+# ---------------------------------------------------------------------------
+
+def test_distributed_ship_values_matches_local_gather():
+    dist = make_index("distributed")
+    ref = make_index("bvh")
+    ship = dist.policy.override(ship_values=True)
+
+    # default stays None (the §2.3 contract) — opting in populates values
+    # with exactly what a local backend gathers, for CSR and kNN alike
+    assert dist.query(_sphere_preds(0.25)).values is None
+    got = dist.query(_sphere_preds(0.25), policy=ship)
+    want = ref.query(_sphere_preds(0.25))
+    assert got.values is not None
+    assert np.array_equal(np.asarray(got.offsets), np.asarray(want.offsets))
+    assert np.allclose(np.asarray(got.values.coords),
+                       _PTS[np.asarray(got.indices)])
+
+    gk = dist.query(P.nearest(G.Points(jnp.asarray(_QP)), k=3), policy=ship)
+    assert gk.values.coords.shape == (Q, 3, DIM)
+    assert np.allclose(np.asarray(gk.values.coords),
+                       _PTS[np.maximum(np.asarray(gk.indices), 0)])
+
+    # empty batch: no collective, empty values pytree
+    empty = dist.query(_sphere_preds(0.25, q=np.zeros((0, DIM), np.float32)),
+                       policy=ship)
+    assert empty.values.coords.shape == (0, DIM)
+
+
+# ---------------------------------------------------------------------------
+# the same scenarios served through an 8-device ShardedIndexStore (ISSUE 10):
+# sharded serving must answer IDENTICALLY to the single-device QueryServer
+# ---------------------------------------------------------------------------
+
+def test_conformance_scenarios_served_sharded_8dev(subproc):
+    subproc("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.core import geometry as G
+from repro.service import (IndexStore, QueryServer, ServiceConfig,
+                           ShardedIndexStore, knn_request, ray_request,
+                           within_request)
+assert jax.device_count() == 8
+N, Q, DIM = 200, 16, 3
+pts = np.random.default_rng(1).uniform(0, 1, (N, DIM)).astype(np.float32)
+qp = np.random.default_rng(2).uniform(0, 1, (Q, DIM)).astype(np.float32)
+D = np.linalg.norm(qp[:, None] - pts[None], axis=-1)
+
+cfg = ServiceConfig(capacity=64, min_bucket=8, max_bucket=64)
+sharded = QueryServer(store=ShardedIndexStore(make_mesh((8,), ("data",)),
+                                              "data"), config=cfg)
+sharded.create_index("default", pts)
+plain = QueryServer(store=IndexStore(), config=cfg)
+plain.create_index("default", G.Points(jnp.asarray(pts)))
+
+# axis-aligned rays through known points (fp-exact slab tests)
+targets = np.random.default_rng(5).integers(0, N, Q)
+o = pts[targets].copy(); o[:, 0] -= 1.0
+d = np.tile([1.0, 0.0, 0.0], (Q, 1)).astype(np.float32)
+
+reqs = [knn_request(qp, 1), knn_request(qp, 5), within_request(qp, 0.3),
+        ray_request(o, d, 1)]
+got, want = sharded.handle(list(reqs)), plain.handle(list(reqs))
+
+for k, r in ((1, got[0]), (5, got[1])):
+    assert np.allclose(r.dists, np.sort(D, 1)[:, :k], atol=1e-5)
+    assert np.allclose(np.take_along_axis(D, r.idxs, 1),
+                       np.sort(D, 1)[:, :k], atol=1e-5)
+    assert r.stats.route == "sharded"
+for g, w in ((got[0], want[0]), (got[1], want[1])):
+    assert np.allclose(g.dists, w.dists, atol=1e-6)
+    assert np.array_equal(g.idxs, w.idxs)
+
+assert np.array_equal(got[2].counts, (D <= 0.3).sum(1))
+assert np.array_equal(got[2].counts, want[2].counts)
+assert got[2].overflow == want[2].overflow == False
+for i, (g, w) in enumerate(zip(got[2].idxs, want[2].idxs)):
+    assert set(g[g >= 0].tolist()) == set(w[w >= 0].tolist()) \
+        == set(np.where(D[i] <= 0.3)[0].tolist())
+
+t = got[3].dists[:, 0]
+assert np.isfinite(t).all() and np.all(t <= 1.0 + 1e-4)
+hit = got[3].idxs[:, 0]
+assert np.allclose(pts[hit][:, 1:], o[:, 1:], atol=1e-6)
+assert np.allclose(got[3].dists, want[3].dists, atol=1e-6)
+print("OK")
+""")

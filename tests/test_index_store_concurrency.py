@@ -232,3 +232,106 @@ def test_query_server_dispatch_pins_against_concurrent_eviction(monkeypatch):
     assert store._pins == {}                    # balanced after handle()
     with pytest.raises(KeyError):               # released -> evicted
         store.get("pts", 1)
+
+
+def test_sharded_refit_vs_pinned_readers_hammer_8dev(subproc):
+    """ISSUE 10: the same two guarantees for ShardedIndexStore on a real
+    8-shard mesh — no torn version<->shard pairing (a pinned snapshot's
+    per-shard top bounds always match the cloud its version number was
+    published with, shard by shard), and pins survive history trimming
+    while distributed refits/rebuilds hammer the registry."""
+    subproc("""
+import threading, time
+import numpy as np, jax, jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.core import geometry as G
+from repro.service import ShardedIndexStore
+assert jax.device_count() == 8
+
+N, DIM, R = 128, 3, 8
+base = np.random.default_rng(3).uniform(0, 1, (N, DIM)).astype(np.float32)
+store = ShardedIndexStore(make_mesh((R,), ("data",)), "data",
+                          keep_versions=1)
+tags = {}
+tag_lock = threading.Lock()
+writer_done = threading.Event()
+errors = []
+
+def cloud(tag):
+    return G.Points(jnp.asarray(base + np.float32(tag)))
+
+entry0 = store.build("pts", cloud(0))
+with tag_lock:
+    tags[entry0.version] = 0
+hold = store.pin("pts")            # survives every trim below
+
+def writer():
+    try:
+        for tag in range(1, 13):
+            if tag % 5 == 0:       # exercise the rebuild path too
+                entry = store.build("pts", cloud(tag))
+            else:                  # pure translation -> per-shard refit
+                entry = store.update("pts", cloud(tag))
+                assert entry.action == "refit", entry.action
+            with tag_lock:
+                tags[entry.version] = tag
+    except Exception as err:
+        errors.append(err)
+    finally:
+        writer_done.set()
+
+def reader():
+    try:
+        last_version = 0
+        while not writer_done.is_set():
+            entry = store.pin("pts")
+            try:
+                assert entry.version >= last_version
+                last_version = entry.version
+                assert store.get("pts", entry.version) is entry
+                tag = None
+                for _ in range(2000):
+                    with tag_lock:
+                        tag = tags.get(entry.version)
+                    if tag is not None or writer_done.is_set():
+                        break
+                    time.sleep(0.001)
+                if tag is None:
+                    with tag_lock:
+                        tag = tags.get(entry.version)
+                assert tag is not None, "published version missing a tag"
+                want = base + np.float32(tag)
+                # not torn, values side: the snapshot's cloud is exactly
+                # the one published under this version number
+                coords = np.asarray(entry.tree.values.coords)
+                assert np.array_equal(coords, want)
+                # not torn, tree side: per-shard top bounds were refitted
+                # against THAT cloud (version<->shard pairing is atomic)
+                shards = want.reshape(R, N // R, DIM)
+                assert np.allclose(np.asarray(entry.tree.top_lo),
+                                   shards.min(1), atol=1e-6)
+                assert np.allclose(np.asarray(entry.tree.top_hi),
+                                   shards.max(1), atol=1e-6)
+            finally:
+                store.release(entry)
+    except Exception as err:
+        errors.append(err)
+
+readers = [threading.Thread(target=reader) for _ in range(3)]
+wt = threading.Thread(target=writer)
+for t in readers + [wt]:
+    t.start()
+for t in readers + [wt]:
+    t.join(300)
+assert not errors, errors
+assert store.get("pts").version == 13
+assert store.get("pts", 1) is hold   # pin outlived 12 swaps at keep=1
+store.release(hold)
+try:
+    store.get("pts", 1)
+    raise SystemExit("v1 should have been evicted on release")
+except KeyError:
+    pass
+assert len(store._history["pts"]) == 1
+print("OK")
+""", timeout=900)
